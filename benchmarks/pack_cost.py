@@ -1,0 +1,66 @@
+"""Paper Fig. 3 reproduction: proportion of runtime spent in the pack step.
+
+Two measurements:
+* the roofline cost model (`core.cost.pack_cost_model`) over the paper's
+  size range — reproduces the 67% -> ~3% exponential decay shape;
+* measured wall time of the actual pack path vs the IAAT (pack-free) path
+  on CPU via numpy (real copies, real GEMM) — a hardware-honest proxy for
+  the paper's Kunpeng measurements.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import cost, dispatch
+
+
+def measured_pack_fraction(M, N, K, iters=20) -> float:
+    rng = np.random.RandomState(0)
+    a = rng.randn(M, K).astype(np.float32)
+    b = rng.randn(K, N).astype(np.float32)
+    bm, bn, bk = 128, 256, 256
+    Mp, Np, Kp = (-(M // -bm)) * bm, (-(N // -bn)) * bn, (-(K // -bk)) * bk
+    t_pack = t_gemm = 0.0
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        ap = np.zeros((Mp, Kp), np.float32)
+        bp = np.zeros((Kp, Np), np.float32)
+        ap[:M, :K] = a              # the pack copies
+        bp[:K, :N] = b
+        t1 = time.perf_counter()
+        ap @ bp
+        t2 = time.perf_counter()
+        t_pack += t1 - t0
+        t_gemm += t2 - t1
+    return t_pack / (t_pack + t_gemm)
+
+
+def model_frac(n: int) -> float:
+    """Pack fraction with REAL pack semantics: the packed buffers are
+    padded to kernel multiples (that padding is exactly why packing hurts
+    small GEMM), GEMM time = max(compute, traffic) roofline."""
+    import jax.numpy as jnp
+    from repro.core import dispatch
+    pack_bytes = dispatch.traditional_pack_bytes(n, n, n, jnp.float32)
+    t_pack = pack_bytes / cost.HBM_BW
+    r = cost.gemm_roofline(n, n, n, 4, peak=cost.PEAK_FLOPS_F32)
+    t_gemm = max(r.compute_s, r.memory_s)
+    return t_pack / (t_pack + t_gemm)
+
+
+def run(csv_rows) -> None:
+    # paper Fig. 3 shape: 67% at tiny sizes decaying toward ~3%.  On TPU
+    # the compute/bandwidth ratio is ~12x Kunpeng's, so the decay reaches
+    # 3% only at n~32k — a hardware-adaptation observation recorded in
+    # EXPERIMENTS.md, not a deviation from the paper's mechanism.
+    for s in (4, 8, 16, 32, 64, 80, 256, 1024, 4096, 32768):
+        csv_rows.append((f"pack_cost/model_frac_n{s}", 0.0,
+                         round(model_frac(s), 4)))
+    for s in (8, 16, 32, 64, 80, 256):
+        f = measured_pack_fraction(s, s, s)
+        csv_rows.append((f"pack_cost/measured_frac_n{s}", 0.0, round(f, 4)))
+    small = model_frac(8)
+    large = model_frac(32768)
+    assert small > 0.6 and large < 0.1, (small, large)

@@ -1,0 +1,69 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun_baseline.json (written by repro.launch.dryrun) and
+emits the per-(arch x shape) three-term roofline table as CSV rows and a
+markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+_DEFAULT = ("results/dryrun_final.json"
+            if os.path.exists("results/dryrun_final.json")
+            else "results/dryrun_baseline.json")
+RESULTS = os.environ.get("DRYRUN_JSON", _DEFAULT)
+
+
+def markdown_table(results: dict, mesh: str = "single") -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| useful_flops | mem/dev GiB | roofline_frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        rl = r["roofline"]
+        mem = r["memory_analysis"].get("total_nonalias", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"{rl['dominant']} | {rl['useful_flops_ratio']:.3f} | "
+            f"{mem:.2f} | {rl['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def run(csv_rows) -> None:
+    if not os.path.exists(RESULTS):
+        csv_rows.append(("roofline/missing_dryrun_json", 0.0, 0))
+        return
+    with open(RESULTS) as f:
+        results = json.load(f)
+    ok = [r for r in results.values() if r["status"] == "ok"]
+    skipped = [r for r in results.values() if r["status"] == "skipped"]
+    err = [r for r in results.values() if r["status"] == "error"]
+    csv_rows.append(("roofline/cells_ok", 0.0, len(ok)))
+    csv_rows.append(("roofline/cells_skipped", 0.0, len(skipped)))
+    csv_rows.append(("roofline/cells_error", 0.0, len(err)))
+    for r in ok:
+        if r["mesh"] != "single":
+            continue
+        rl = r["roofline"]
+        csv_rows.append((f"roofline/{r['arch']}/{r['shape']}/dominant={rl['dominant']}",
+                         0.0, round(rl["roofline_fraction"], 5)))
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline_table.md", "w") as f:
+        f.write("## Single-pod (16x16) roofline\n\n")
+        f.write(markdown_table(results, "single"))
+        f.write("\n\n## Multi-pod (2x16x16) roofline\n\n")
+        f.write(markdown_table(results, "multi"))
+        f.write("\n")

@@ -1,0 +1,39 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (gemm_sweep, kernel_table, pack_cost, roofline,
+                            tiling_memops)
+    suites = [
+        ("tiling_memops", tiling_memops.run),   # paper Fig. 2
+        ("pack_cost", pack_cost.run),           # paper Fig. 3
+        ("kernel_table", kernel_table.run),     # paper TABLE I
+        ("gemm_sweep", gemm_sweep.run),         # paper Figs. 4-7
+        ("roofline", roofline.run),             # framework deliverable (g)
+    ]
+    rows = []
+    for name, fn in suites:
+        t0 = time.perf_counter()
+        try:
+            fn(rows)
+            rows.append((f"{name}/suite_s", (time.perf_counter() - t0) * 1e6,
+                         "ok"))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            rows.append((f"{name}/suite_s", (time.perf_counter() - t0) * 1e6,
+                         f"ERROR:{type(e).__name__}:{e}"))
+    print("name,us_per_call,derived")
+    bad = 0
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+        if isinstance(derived, str) and derived.startswith("ERROR"):
+            bad += 1
+    if bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

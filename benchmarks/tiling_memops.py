@@ -1,0 +1,70 @@
+"""Paper Fig. 2 reproduction: tiling memops for small SGEMM_NN.
+
+The paper reports that its input-aware tiling of a 15x15 SGEMM_NN loads
+72K+450 elements vs 105K+450 for the traditional fixed-kernel tiling
+(45% more).  We reproduce the 72 coefficient EXACTLY with the DP planner
+over the verbatim ARMv8 TABLE I (12x{6,6,3} + 3x{13,2}), and report the
+paper's Algorithm-2 greedy for comparison, plus a sweep over all small
+sizes showing DP <= greedy everywhere (our beyond-paper improvement to
+the run-time stage).
+"""
+from __future__ import annotations
+
+from repro.core import paper_table
+from repro.core.tiler import tile_armv8
+
+
+def traditional_coeff(M: int, N: int) -> int:
+    """Traditional tiling: fixed square kernels chosen greedily from
+    {4,3,2,1} on BOTH dims, with no input-aware (m x n) co-selection —
+    the key difference from IAAT is that n is never widened to 6/13.
+    Gives 120 for 15x15 (paper's own traditional figure is 105; both are
+    ~1.5-1.7x the IAAT 72 — the conclusion is unchanged)."""
+    def split(L):
+        out, rest = [], L
+        for k in (4, 3, 2, 1):
+            while rest >= k and (k > 1 or rest > 0):
+                if rest - k in (1,) and k == 4 and rest != 4:
+                    break
+                out.append(k)
+                rest -= k
+                if k != 4:
+                    break
+        while rest:
+            out.append(1)
+            rest -= 1
+        return out
+    ms, ns = split(M), split(N)
+    return sum(m + n for m in ms for n in ns)
+
+
+def run(csv_rows) -> None:
+    t_dp = tile_armv8(15, 15, "S", "NN", "dp")
+    t_gr = tile_armv8(15, 15, "S", "NN", "greedy")
+    trad = traditional_coeff(15, 15)
+    csv_rows.append(("tiling_memops/15x15_dp_coeff", 0.0, t_dp.coeff))
+    csv_rows.append(("tiling_memops/15x15_greedy_coeff", 0.0, t_gr.coeff))
+    csv_rows.append(("tiling_memops/15x15_traditional_coeff", 0.0, trad))
+    csv_rows.append(("tiling_memops/15x15_paper_iaat", 0.0,
+                     paper_table.PAPER_FIG2_IAAT_COEFF))
+    assert t_dp.coeff == paper_table.PAPER_FIG2_IAAT_COEFF, \
+        f"DP coeff {t_dp.coeff} != paper 72"
+    # sweep: DP vs greedy over all sizes the paper calls small
+    wins = ties = total = 0
+    worst = (0, 0, 0)
+    for M in range(1, 33):
+        for N in range(1, 33):
+            dp = tile_armv8(M, N, "S", "NN", "dp").coeff
+            gr = tile_armv8(M, N, "S", "NN", "greedy").coeff
+            assert dp <= gr, (M, N, dp, gr)
+            total += 1
+            if dp < gr:
+                wins += 1
+                if gr - dp > worst[2]:
+                    worst = (M, N, gr - dp)
+            else:
+                ties += 1
+    csv_rows.append(("tiling_memops/dp_strictly_better_cells", 0.0, wins))
+    csv_rows.append(("tiling_memops/dp_equal_cells", 0.0, ties))
+    csv_rows.append((f"tiling_memops/max_gain_at_{worst[0]}x{worst[1]}",
+                     0.0, worst[2]))

@@ -1,0 +1,180 @@
+"""Public IAAT API + smallness dispatch (ties the two stages together).
+
+``iaat_gemm``   — BLAS-style C = alpha*op(A)@op(B) + beta*C.  Applies the
+                  paper's input-aware criterion: small problems run the
+                  planned pallas-kernel path (no pack, no boundary code),
+                  large problems fall through to XLA's packed GEMM, which
+                  is the "traditional BLAS" regime where packing is
+                  amortised and correct to prefer.
+``matmul``      — the framework entry every model layer routes through.
+``traditional_gemm`` — the explicit pack-step pipeline (pad + blocked
+                  copy + fixed kernel), kept as the paper's baseline for
+                  the Fig. 3 pack-cost benchmark.
+
+Config is a contextvar so tests/benchmarks/models can flip backends
+(`xla` for CPU dry-runs, `pallas` with interpret=True for kernel
+validation, `pallas` compiled on real TPUs) without threading arguments.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernelgen, paper_table, plan as plan_mod, vmem
+
+# TPU scale factor for the smallness thresholds: the paper's 80/32 bounds
+# are where pack+boundary overheads stop mattering on a 128-bit SIMD unit;
+# on a 128x128 MXU the equivalent crossover sits ~4x higher (napkin math in
+# DESIGN.md; revisited empirically in EXPERIMENTS.md §Perf).
+TPU_SCALE = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    backend: str = "auto"          # pallas | xla | auto
+    interpret: bool = True         # pallas interpret mode (CPU container)
+    method: str = "dp"             # tiler: dp (ours) | greedy (paper)
+    paper_thresholds: bool = False  # use the ARMv8 80/32 bounds verbatim
+    max_plan_regions: int = 64     # sanity valve
+
+    def threshold(self, trans: str) -> float:
+        base = (paper_table.PAPER_SMALL_THRESHOLD_TN if trans == "TN"
+                else paper_table.PAPER_SMALL_THRESHOLD)
+        return base if self.paper_thresholds else base * TPU_SCALE
+
+
+_CONFIG = contextvars.ContextVar("iaat_config", default=DispatchConfig())
+
+
+def config() -> DispatchConfig:
+    return _CONFIG.get()
+
+
+@contextlib.contextmanager
+def configure(**kw):
+    tok = _CONFIG.set(dataclasses.replace(_CONFIG.get(), **kw))
+    try:
+        yield _CONFIG.get()
+    finally:
+        _CONFIG.reset(tok)
+
+
+def small_enough(M: int, N: int, K: int, trans: str = "NN",
+                 cfg: Optional[DispatchConfig] = None) -> bool:
+    """The paper's input-aware criterion: cbrt(MNK) <= threshold."""
+    cfg = cfg or config()
+    return (M * N * K) ** (1.0 / 3.0) <= cfg.threshold(trans)
+
+
+def _trans_str(trans_a: bool, trans_b: bool) -> str:
+    return ("T" if trans_a else "N") + ("T" if trans_b else "N")
+
+
+def _problem_dims(a_shape, b_shape, trans: str):
+    M, Ka = (a_shape[1], a_shape[0]) if trans[0] == "T" else a_shape
+    Kb, N = (b_shape[1], b_shape[0]) if trans[1] == "T" else b_shape
+    if Ka != Kb:
+        raise ValueError(f"K mismatch: {a_shape} {trans[0]} vs {b_shape} {trans[1]}")
+    return M, N, Ka
+
+
+def _xla_gemm(a, b, c, alpha, beta, trans: str):
+    opa = a.T if trans[0] == "T" else a
+    opb = b.T if trans[1] == "T" else b
+    out = alpha * jnp.dot(opa, opb,
+                          preferred_element_type=jnp.promote_types(
+                              a.dtype, jnp.float32)
+                          if not jnp.issubdtype(a.dtype, jnp.complexfloating)
+                          else None)
+    out = out.astype(jnp.result_type(a.dtype, b.dtype))
+    if c is not None:
+        out = out + jnp.asarray(beta, c.dtype) * c
+    return out
+
+
+def iaat_gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None,
+              alpha=1.0, beta=0.0, trans_a: bool = False,
+              trans_b: bool = False) -> jax.Array:
+    """C = alpha * op(A) @ op(B) + beta * C with input-aware dispatch."""
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError("iaat_gemm is the 2-D BLAS entry; use matmul()")
+    cfg = config()
+    trans = _trans_str(trans_a, trans_b)
+    M, N, K = _problem_dims(a.shape, b.shape, trans)
+    letter = kernelgen.blas_letter(jnp.result_type(a.dtype, b.dtype))
+    use_pallas = cfg.backend == "pallas" or (
+        cfg.backend == "auto" and small_enough(M, N, K, trans, cfg))
+    if not use_pallas or cfg.backend == "xla":
+        return _xla_gemm(a, b, c, alpha, beta, trans)
+    p = plan_mod.build_plan(M, N, K, letter, trans, cfg.method)
+    if p.num_kernel_calls > cfg.max_plan_regions:
+        return _xla_gemm(a, b, c, alpha, beta, trans)
+    return plan_mod.execute(p, a, b, c, alpha, beta,
+                            interpret=cfg.interpret)
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Framework matmul: (..., K) @ (K, N) with IAAT small-GEMM dispatch.
+
+    Leading dims of ``x`` are flattened into M.  This is the hook through
+    which every model layer (expert FFNs, decode-time projections, …)
+    reaches the paper's technique.
+    """
+    cfg = config()
+    if cfg.backend == "xla":
+        return jnp.matmul(x, w)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape((-1, K))
+    out = iaat_gemm(x2, w)
+    return out.reshape(lead + (w.shape[-1],))
+
+
+# --------------------------------------------------------------------------
+# The traditional (pack-step) pipeline — the paper's baseline.
+# --------------------------------------------------------------------------
+
+_PACK_SIG = {"S": (128, 256, 256), "D": (64, 128, 128),
+             "C": (64, 128, 128), "Z": (32, 128, 128),
+             "H": (256, 256, 256)}
+
+
+def traditional_gemm(a, b, c=None, alpha=1.0, beta=0.0,
+                     trans_a: bool = False, trans_b: bool = False,
+                     *, interpret: bool = True):
+    """Classic block+pack+compute GEMM (paper §I): normalise both operands
+    into padded NN layout (the pack step — real extra HBM traffic), then
+    run ONE fixed kernel over the padded problem.  Exists to measure what
+    IAAT removes."""
+    from repro.kernels import iaat_gemm as kmod
+    trans = _trans_str(trans_a, trans_b)
+    M, N, K = _problem_dims(a.shape, b.shape, trans)
+    letter = kernelgen.blas_letter(jnp.result_type(a.dtype, b.dtype))
+    bm, bn, bk = _PACK_SIG[letter]
+    # pack: transpose-normalise + pad to kernel multiples (copies!)
+    opa = a.T if trans[0] == "T" else a
+    opb = b.T if trans[1] == "T" else b
+    Mp, Np, Kp = (vmem.round_up(M, bm), vmem.round_up(N, bn),
+                  vmem.round_up(K, bk))
+    opa = jnp.pad(opa, ((0, Mp - M), (0, Kp - K)))
+    opb = jnp.pad(opb, ((0, Kp - K), (0, Np - N)))
+    sig = kernelgen.KernelSig(letter, "NN", bm, bn, bk)
+    out = kmod.gemm_region(sig, opa, opb, None, alpha=alpha, beta=0.0,
+                           interpret=interpret)[:M, :N]
+    if c is not None:
+        out = out + jnp.asarray(beta, out.dtype) * c
+    return out
+
+
+def traditional_pack_bytes(M: int, N: int, K: int, dtype) -> int:
+    """HBM bytes the pack step moves (read+write both panels)."""
+    item = jnp.dtype(dtype).itemsize
+    letter = kernelgen.blas_letter(dtype)
+    bm, bn, bk = _PACK_SIG[letter]
+    Mp, Np, Kp = vmem.round_up(M, bm), vmem.round_up(N, bn), vmem.round_up(K, bk)
+    return 2 * (Mp * Kp + Kp * Np) * item

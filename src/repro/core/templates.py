@@ -1,0 +1,134 @@
+"""Computational Template Designer (paper §IV-A), adapted to TPU.
+
+The paper abstracts ARMv8 FMA patterns (``sfmlas``/``dfmlav``/``sfcmlas``…)
+as templates that the kernel generator stitches into microkernels.  On TPU
+the analogous "instruction" is a block-level contraction issued to the MXU
+(``lax.dot_general`` with explicit dimension numbers).  Each template below
+is a *block* compute pattern:
+
+* ``contract``        — real vector/matrix multiply-accumulate (fmla family),
+                        one template per transposition (dimension numbers do
+                        the work of the paper's per-transposition load
+                        strategies, so no data relayout = no pack step).
+* ``cmul_karatsuba``  — complex multiply-accumulate via 3 real contractions
+                        (the fcmla analogue; 3-mult Gauss trick chosen by the
+                        kernel optimizer over the naive 4-mult form).
+* ``cmul_fcmla``      — the literal 4-real-multiplication fcmla pattern,
+                        kept for parity with the paper's template table.
+* ``epilogue_axpby``  — the alpha/beta update C = alpha*AB + beta*C.
+
+Templates are pure functions of jnp arrays so the same code path serves the
+Pallas kernel body (operating on VMEM refs' loaded blocks) and the jnp
+reference oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Transposition encoding, matching the paper: op(A)@op(B); "N" = as stored,
+# "T" = transposed.  Storage convention (row-major):
+#   A: (M, K) if A-trans == "N" else (K, M)
+#   B: (K, N) if B-trans == "N" else (N, K)
+TRANSPOSITIONS = ("NN", "NT", "TN", "TT")
+
+# dot_general dimension numbers for each transposition. Contracting the
+# stored arrays directly (no transpose op emitted) is the TPU analogue of
+# the paper's "remove the pack step": the MXU consumes either layout.
+_DIMS = {
+    "NN": (((1,), (0,)), ((), ())),  # (M,K) x (K,N)
+    "NT": (((1,), (1,)), ((), ())),  # (M,K) x (N,K)
+    "TN": (((0,), (0,)), ((), ())),  # (K,M) x (K,N)
+    "TT": (((0,), (1,)), ((), ())),  # (K,M) x (N,K)
+}
+# Output of TT dot above is (M, N) already because we contract a-dim0/b-dim1
+# leaving (M,)+(N,).  For TN the remaining dims are (M,)+(N,) as well.
+
+
+def contract(a: jax.Array, b: jax.Array, trans: str,
+             acc_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Real multiply-accumulate template (sfmlas/dfmlas family).
+
+    Returns op(a) @ op(b) accumulated in ``acc_dtype`` (MXU native f32
+    accumulation; f64 in interpret mode for DGEMM/ZGEMM parity).
+    """
+    if trans not in _DIMS:
+        raise ValueError(f"bad transposition {trans!r}")
+    return lax.dot_general(a, b, _DIMS[trans],
+                           preferred_element_type=acc_dtype)
+
+
+def contract_flops(m: int, n: int, k: int, complex_: bool = False,
+                   karatsuba: bool = True) -> int:
+    """FLOPs of one block contraction (for the cost model / roofline)."""
+    real = 2 * m * n * k
+    if not complex_:
+        return real
+    return (3 if karatsuba else 4) * real + 5 * m * n
+
+
+def cmul_karatsuba(ar, ai, br, bi, trans: str, acc_dtype=jnp.float32):
+    """Complex MMA via 3 real contractions (Gauss/Karatsuba).
+
+    P1 = Ar*Br ; P2 = Ai*Bi ; P3 = (Ar+Ai)(Br+Bi)
+    Cr = P1 - P2 ; Ci = P3 - P1 - P2
+    Returns the three partial products so a k-looped kernel can accumulate
+    each independently (the partials are linear in A,B so per-k-step
+    accumulation commutes with the final combine).
+    """
+    p1 = contract(ar, br, trans, acc_dtype)
+    p2 = contract(ai, bi, trans, acc_dtype)
+    p3 = contract(ar + ai, br + bi, trans, acc_dtype)
+    return p1, p2, p3
+
+
+def karatsuba_combine(p1, p2, p3) -> Tuple[jax.Array, jax.Array]:
+    return p1 - p2, p3 - p1 - p2
+
+
+def cmul_fcmla(ar, ai, br, bi, trans: str, acc_dtype=jnp.float32):
+    """The paper's fcmla pattern: 4 real contractions (naive complex MMA).
+
+    Kept for template-table parity and as the cost-model baseline the
+    kernel optimizer improves upon (3-mult Karatsuba).
+    """
+    cr = contract(ar, br, trans, acc_dtype) - contract(ai, bi, trans, acc_dtype)
+    ci = contract(ar, bi, trans, acc_dtype) + contract(ai, br, trans, acc_dtype)
+    return cr, ci
+
+
+def epilogue_axpby(acc, c_old, alpha, beta, out_dtype):
+    """C = alpha*acc + beta*C template (GEMM epilogue, fused in-kernel)."""
+    out = alpha * acc
+    if c_old is not None:
+        out = out + beta * c_old.astype(acc.dtype)
+    return out.astype(out_dtype)
+
+
+def negv(x):
+    """fneg template (used by the complex combine in the fcmla path)."""
+    return -x
+
+
+@dataclasses.dataclass(frozen=True)
+class TemplateInfo:
+    """Census entry for the template table (benchmarks/kernel_table.py)."""
+    name: str
+    arity: int
+    description: str
+
+
+TEMPLATE_TABLE = (
+    TemplateInfo("contract.NN", 2, "real MMA, A row-major, B row-major"),
+    TemplateInfo("contract.NT", 2, "real MMA, B stored transposed"),
+    TemplateInfo("contract.TN", 2, "real MMA, A stored transposed"),
+    TemplateInfo("contract.TT", 2, "real MMA, both stored transposed"),
+    TemplateInfo("cmul_karatsuba", 4, "complex MMA, 3 real contractions"),
+    TemplateInfo("cmul_fcmla", 4, "complex MMA, 4 real contractions (paper)"),
+    TemplateInfo("epilogue_axpby", 2, "alpha/beta epilogue"),
+    TemplateInfo("negv", 1, "negation (fneg)"),
+)

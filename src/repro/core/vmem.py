@@ -1,0 +1,129 @@
+"""Register Allocator (paper §IV-C), adapted: the VMEM block allocator.
+
+The paper allocates 32x128-bit NEON registers across three groups (two
+ping-pang columns of A_c, two rows of B_c, the whole C_c block).  On TPU the
+scarce resource one level up from registers is VMEM (~16 MiB/core); Mosaic
+owns actual vector registers.  This module answers the same two questions
+the paper's allocator answers:
+
+1. *Does a candidate kernel size fit?*  — ``fits_vmem`` computes the VMEM
+   footprint of (double-buffered A block) + (double-buffered B block) +
+   (f32 accumulator block) (+ complex plane multipliers) against the budget.
+2. *What sizes are legal?* — ``align_*`` snap block dims to the TPU tiling
+   grain (sublane x lane, dtype dependent), the analogue of "divisible by
+   the length of SIMD register" (paper §V-A principle c).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+LANE = 128          # last-dim tiling grain (all dtypes)
+VMEM_BYTES = 16 * 1024 * 1024   # v5e VMEM per core
+VMEM_BUDGET = int(VMEM_BYTES * 0.75)  # leave headroom for Mosaic spills/semaphores
+PING_PANG = 2       # double buffering multiplier (paper's M1/M2 stages)
+
+# second-to-last dim tiling grain per element width
+_SUBLANE = {4: 8, 2: 16, 1: 32, 8: 8}
+
+
+def sublane(dtype) -> int:
+    return _SUBLANE[jnp.dtype(dtype).itemsize]
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def align_m(m: int, dtype) -> int:
+    return round_up(max(m, 1), sublane(dtype))
+
+
+def align_n(n: int, dtype) -> int:
+    return round_up(max(n, 1), LANE)
+
+
+def align_k(k: int, dtype) -> int:
+    # K appears as the lane dim of A(N)/B(T) and the sublane dim of
+    # A(T)/B(N); align to LANE so both layouts are tile-exact.
+    return round_up(max(k, 1), LANE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Footprint:
+    a_bytes: int
+    b_bytes: int
+    acc_bytes: int
+    c_bytes: int
+    total: int
+
+    @property
+    def fits(self) -> bool:
+        return self.total <= VMEM_BUDGET
+
+
+def footprint(bm: int, bn: int, bk: int, dtype, *, complex_: bool = False,
+              has_c_in: bool = False, acc_dtype=jnp.float32) -> Footprint:
+    """VMEM bytes for one grid step of a (bm,bn,bk) GEMM kernel.
+
+    Mirrors the paper's three register groups:
+      A group: bm*bk  (x2 ping-pang, x2 planes if complex)
+      B group: bk*bn  (x2 ping-pang, x2 planes if complex)
+      C group: bm*bn accumulator (f32/f64; x3 planes if complex-karatsuba)
+               plus the C input block when beta != 0.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    planes = 2 if complex_ else 1
+    acc_planes = 3 if complex_ else 1     # karatsuba partials
+    acc_item = jnp.dtype(acc_dtype).itemsize
+    a = bm * bk * itemsize * PING_PANG * planes
+    b = bk * bn * itemsize * PING_PANG * planes
+    acc = bm * bn * acc_item * acc_planes
+    c = bm * bn * itemsize * planes * (2 if has_c_in else 1)
+    return Footprint(a, b, acc, c, a + b + acc + c)
+
+
+def fits_vmem(bm: int, bn: int, bk: int, dtype, **kw) -> bool:
+    return footprint(bm, bn, bk, dtype, **kw).fits
+
+
+def max_whole_problem(dtype, *, complex_: bool = False) -> int:
+    """Largest cube edge s.t. the whole GEMM fits in VMEM in one grid step.
+
+    This is the TPU analogue of the paper's small-GEMM regime: when the
+    entire problem is VMEM-resident there is no HBM re-streaming at all
+    (the strongest form of "no pack step, no boundary processing").
+    """
+    lo, hi = 1, 4096
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        m = align_m(mid, dtype)
+        n = align_n(mid, dtype)
+        k = align_k(mid, dtype)
+        if fits_vmem(m, n, k, dtype, complex_=complex_):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def arithmetic_intensity(bm: int, bn: int, bk: int, dtype,
+                         complex_: bool = False) -> float:
+    """FLOPs per HBM byte for one kernel block (roofline napkin math)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    planes = 2 if complex_ else 1
+    mults = 3 if complex_ else 1
+    flops = 2 * bm * bn * bk * mults
+    bytes_ = (bm * bk + bk * bn + bm * bn) * itemsize * planes
+    return flops / bytes_
+
+
+def vreg_pressure(bm: int, bn: int, dtype) -> int:
+    """Estimated VREG count for the C accumulator (advisory only: Mosaic
+    allocates registers, but kernels whose C block exceeds the physical
+    64x(8x128) VREG file will spill to VMEM — the generator uses this to
+    order candidates, mirroring the paper's C-group register constraint)."""
+    per_vreg = 8 * 128
+    return math.ceil((bm * bn) / per_vreg)

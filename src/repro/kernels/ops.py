@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for every kernel in this package.
+
+These are the callables examples/benchmarks/models import.  Shape/flag
+arguments that select a kernel instance are static; array arguments are
+traced.  Each wrapper routes through the IAAT dispatch layer where the
+paper's technique applies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.kernels import flash_attention as _fa
+from repro.kernels import grouped_gemm as _gg
+from repro.kernels import ssd as _ssd
+
+
+def gemm(a, b, c=None, alpha=1.0, beta=0.0, trans_a=False, trans_b=False):
+    """BLAS-style small-GEMM entry (input-aware dispatch)."""
+    return dispatch.iaat_gemm(a, b, c, alpha, beta, trans_a, trans_b)
+
+
+@functools.partial(jax.jit, static_argnames=("trans_a", "trans_b",
+                                             "alpha", "beta", "backend",
+                                             "interpret", "method"))
+def gemm_jit(a, b, c=None, *, alpha=1.0, beta=0.0, trans_a=False,
+             trans_b=False, backend="auto", interpret=True, method="dp"):
+    with dispatch.configure(backend=backend, interpret=interpret,
+                            method=method):
+        return dispatch.iaat_gemm(a, b, c, alpha, beta, trans_a, trans_b)
+
+
+def matmul(x, w):
+    return dispatch.matmul(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "blocks"))
+def batched_gemm(x, w, *, interpret=True, blocks=None):
+    return _gg.batched_gemm(x, w, interpret=interpret, blocks=blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret", "blocks"))
+def ragged_gemm(x, w, tile_group_ids, *, bm=128, interpret=True,
+                blocks=None):
+    return _gg.ragged_gemm(x, w, tile_group_ids, bm=bm,
+                           interpret=interpret, blocks=blocks)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "scale", "bq", "bkv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    scale=None, bq=128, bkv=128, interpret=True):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, scale=scale, bq=bq,
+                               bkv=bkv, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=True):
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x
+# mesh) cell and extract memory / cost / collective statistics.  The two
+# lines above MUST run before any jax import (jax locks the device count on
+# first init); do NOT move them or set the flag globally.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                        # noqa: E402
+from repro.configs.base import SHAPES, shape_applicable  # noqa: E402
+from repro.launch import hlo_analyzer, hlo_stats  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.common import XLA              # noqa: E402
+from repro.models.registry import build as build_model  # noqa: E402
+from repro.parallel import rules as R            # noqa: E402
+from repro.parallel.ctx import activation_axes, activation_sharding  # noqa: E402
+from repro.train import loop as train_loop       # noqa: E402
+
+# per-(arch, shape) gradient-accumulation overrides (memory fitting; see
+# EXPERIMENTS.md §Dry-run for the derivation)
+ACCUM = {"train_4k": 8}
+ACCUM_ARCH = {("mixtral-8x22b", "train_4k"): 16}
+
+
+def input_specs(cfg, shape, mesh, rules) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    emb = jnp.bfloat16
+    d = cfg.d_model
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+               "labels": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.frontend == "vision":
+            out["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.frontend_tokens), tok)
+            out["labels"] = jax.ShapeDtypeStruct((B, S - cfg.frontend_tokens), tok)
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, d), emb)
+        if cfg.frontend == "audio":
+            out["src_embeds"] = jax.ShapeDtypeStruct((B, S, d), emb)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.frontend == "vision":
+            out["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.frontend_tokens), tok)
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, d), emb)
+        if cfg.frontend == "audio":
+            out["src_embeds"] = jax.ShapeDtypeStruct((B, S, d), emb)
+        return out
+    # decode: one token; the cache is built separately
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}
+
+
+def _cache_struct(model, cfg, shape):
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 jnp.bfloat16))
+
+
+def _serving_params(model):
+    """Serving deploys bf16 weights (no f32 master / optimizer state)."""
+    structs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, structs)
+
+
+def _cache_shardings(cache_struct, cfg, shape, mesh, rules):
+    spec_by_name = R.cache_shardings(cfg, shape, mesh, rules)
+
+    def one(path, leaf):
+        name = path[-1].name if hasattr(path[-1], "name") else str(path[-1])
+        return NamedSharding(mesh, spec_by_name.get(name, P()))
+
+    # dataclass pytrees flatten positionally; rebuild by field name
+    import dataclasses as dc
+    kw = {}
+    for f in dc.fields(cache_struct):
+        v = getattr(cache_struct, f.name)
+        if v is None:
+            kw[f.name] = None
+        else:
+            kw[f.name] = NamedSharding(mesh, spec_by_name.get(f.name, P()))
+    return type(cache_struct)(**kw)
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch     # decode: one token per seq
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, fsdp: bool = True, accum: Optional[int] = None,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    rules = R.make_rules(cfg, mesh, fsdp=fsdp)
+    be = XLA
+    act_axes = activation_axes(cfg, mesh, R.batch_spec(mesh, shape.global_batch))
+
+    with mesh, activation_sharding(mesh, act_axes):
+        if shape.kind == "train":
+            acc = accum if accum is not None else ACCUM_ARCH.get(
+                (arch, shape_name), ACCUM.get(shape_name, 1))
+            tc = train_loop.TrainConfig(accum_steps=acc)
+            step_fn = train_loop.make_train_step(model, tc, be)
+            state_struct = jax.eval_shape(
+                lambda: train_loop.init_train_state(model, jax.random.PRNGKey(0)))
+            state_sh = rules.tree_shardings(train_loop.train_state_specs(model))
+            batch_struct = input_specs(cfg, shape, mesh, rules)
+            batch_sh = {k: R.data_shardings(cfg, shape, mesh, rules)[k]
+                        for k in batch_struct}
+            lowered = jax.jit(step_fn,
+                              in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None),
+                              donate_argnums=(0,)) \
+                .lower(state_struct, batch_struct)
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, be)
+            param_struct = _serving_params(model)
+            param_sh = rules.tree_shardings(model.specs())
+            batch_struct = input_specs(cfg, shape, mesh, rules)
+            batch_sh = {k: R.data_shardings(cfg, shape, mesh, rules)[k]
+                        for k in batch_struct}
+            cache_struct = jax.eval_shape(
+                lambda p, b: prefill_step(p, b)[1], param_struct, batch_struct)
+            cache_sh = _cache_shardings(cache_struct, cfg, shape, mesh, rules)
+            lowered = jax.jit(prefill_step,
+                              in_shardings=(param_sh, batch_sh),
+                              out_shardings=(None, cache_sh)) \
+                .lower(param_struct, batch_struct)
+        else:
+            def serve_step(params, tokens, cache):
+                return model.decode(params, {"tokens": tokens}, cache, be)
+            param_struct = _serving_params(model)
+            param_sh = rules.tree_shardings(model.specs())
+            cache_struct = _cache_struct(model, cfg, shape)
+            cache_sh = _cache_shardings(cache_struct, cfg, shape, mesh, rules)
+            tok_struct = input_specs(cfg, shape, mesh, rules)["tokens"]
+            tok_sh = R.data_shardings(cfg, shape, mesh, rules)["tokens"]
+            lowered = jax.jit(serve_step,
+                              in_shardings=(param_sh, tok_sh, cache_sh),
+                              out_shardings=(None, cache_sh),
+                              donate_argnums=(2,)) \
+                .lower(param_struct, tok_struct, cache_struct)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    n_dev = mesh.size
+    ca = hlo_stats.cost_analysis_terms(compiled)
+    ma = hlo_stats.memory_analysis_terms(compiled)
+    hlo = compiled.as_text()
+    # lax.cond branch weights: fraction of scan iterations where the true
+    # branch (apply-shared / global-attention) actually runs
+    ctw, cfw = 1.0, 1.0
+    if cfg.shared_attn_every:
+        napps = -(cfg.n_layers // -cfg.shared_attn_every)
+        ctw = napps / cfg.n_layers
+        cfw = 1.0 - ctw
+    elif cfg.attn.kind == "local_global":
+        ctw = 1.0 / (cfg.attn.local_ratio + 1)     # true = global branch
+        cfw = 1.0 - ctw
+    st = hlo_analyzer.analyze(hlo, cond_true_weight=ctw,
+                              cond_false_weight=cfw)
+    coll = {k: int(v) for k, v in st.coll.items()}
+    coll["total"] = int(st.coll_total)
+    mf = model_flops(cfg, shape) / n_dev
+    rl = hlo_stats.Roofline(flops=st.flops, hbm_bytes=st.traffic,
+                            coll_bytes=st.coll_total, model_flops=mf)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_analysis": ca, "memory_analysis": ma,
+        "collectives": coll, "model_flops_per_dev": mf,
+        "roofline": rl.as_dict(),
+        "analyzer": {"dots": st.dots, "loops": st.loops},
+        "rules_fallbacks": rules.fallbacks,
+        "hlo_bytes": len(hlo),
+    }
+    if keep_hlo:
+        rec["hlo_text"] = hlo
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                if args.skip_existing and results.get(key, {}).get("status") == "ok":
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[cell] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, fsdp=not args.no_fsdp,
+                                   accum=args.accum)
+                except Exception as e:  # noqa: BLE001 — log and continue
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']}"
+                             f" frac={r['roofline_fraction']:.3f}"
+                             f" mem/dev={rec['memory_analysis'].get('total_nonalias', 0)/2**30:.2f}GiB"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[done] {key}: {status}{extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"dry-run complete: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

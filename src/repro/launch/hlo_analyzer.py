@@ -1,0 +1,244 @@
+"""Trip-count-aware HLO analysis.
+
+``compiled.cost_analysis()`` counts each while-loop BODY once, which
+undercounts scanned-layer programs by O(layers x accum_steps).  This
+module re-derives the three roofline inputs from the optimized HLO text,
+multiplying each computation's contribution by the product of its
+enclosing loops' ``known_trip_count`` values:
+
+  * dot FLOPs        2 * prod(out_shape) * prod(contracted dims)
+  * HBM traffic      sum over ops of (operand + output bytes), XLA
+                     cost-analysis semantics, fusion-opaque
+  * collective bytes per kind, output-shape bytes
+
+``lax.cond`` branches (conditional ops) can be weighted by an explicit
+fraction (e.g. zamba2's shared block runs on 14/81 of layer iterations);
+default weight is 1 for both branches (structural upper bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "bitcast-convert", "reshape", "after-all",
+                 "partition-id", "replica-id", "iota", "while",
+                 "conditional", "call"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*\\?{\\?"n\\?":\\?"(\d+)\\?"')
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def _split_shape_opcode(rest: str) -> Tuple[str, str, str]:
+    """rest = everything after '= '. Returns (shape, opcode, args_line)."""
+    depth = 0
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == " " and depth == 0:
+            shape = rest[:i]
+            tail = rest[i + 1:]
+            m = re.match(r"([\w\-]+)\(", tail)
+            if not m:
+                return shape, "", tail
+            return shape, m.group(1), tail
+    return rest, "", ""
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{", line)
+        if header and not line.lstrip().startswith("ROOT"):
+            cur = Computation(header.group(1), {}, [])
+            comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = re.match(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        shape, opcode, args = _split_shape_opcode(rest)
+        operands = _NAME_RE.findall(args.split(", sharding=")[0]) if args else []
+        cur.ops[name] = Op(name, shape, opcode, line, operands)
+        cur.order.append(name)
+    return comps
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation not referenced by anyone
+    referenced = set()
+    for c in comps.values():
+        for op in c.ops.values():
+            for attr in ("calls=", "to_apply=", "body=", "condition=",
+                         "true_computation=", "false_computation=",
+                         "branch_computations="):
+                if attr in op.line:
+                    referenced.update(_NAME_RE.findall(
+                        op.line.split(attr, 1)[1].split(")")[0]))
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1
+    dims = _shape_dims(op.shape)
+    if not dims:
+        return 0.0
+    for d in dims[0][1]:
+        out_elems *= d
+    # contracted size from lhs operand shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", op.line)
+    k = 1
+    if m and op.operands:
+        lhs = comp.ops.get(op.operands[0])
+        if lhs is not None:
+            ldims = _shape_dims(lhs.shape)
+            if ldims:
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(ldims[0][1]):
+                        k *= ldims[0][1][int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _op_traffic(op: Op, comp: Computation) -> float:
+    if op.opcode in _SKIP_TRAFFIC or not op.opcode:
+        return 0.0
+    total = shape_bytes(op.shape)
+    for o in op.operands:
+        src = comp.ops.get(o)
+        if src is not None and src.opcode not in ("constant",):
+            total += shape_bytes(src.shape)
+    return float(total)
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    dots: int = 0
+    loops: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def analyze(text: str, *, cond_true_weight: float = 1.0,
+            cond_false_weight: float = 1.0) -> HloStats:
+    comps = parse_hlo(text)
+    entry = _entry_name(comps, text)
+    stats = HloStats()
+    seen_stack: List[str] = []
+
+    def visit(cname: str, mult: float, traffic: bool = True) -> None:
+        comp = comps.get(cname)
+        if comp is None or cname in seen_stack:
+            return
+        seen_stack.append(cname)
+        for name in comp.order:
+            op = comp.ops[name]
+            if op.opcode == "dot":
+                stats.flops += mult * _dot_flops(op, comp)
+                stats.dots += 1
+            elif op.opcode == "convolution":
+                stats.flops += mult * 2 * shape_bytes(op.shape)  # coarse
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                stats.coll[base] += mult * shape_bytes(op.shape)
+            if traffic:
+                stats.traffic += mult * _op_traffic(op, comp)
+            # recurse
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.line)
+                trips = int(tm.group(1)) if tm else 1
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                if mb:
+                    stats.loops[mb.group(1)] = trips
+                    visit(mb.group(1), mult * trips, traffic)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if mc:
+                    visit(mc.group(1), mult * trips, False)
+            elif op.opcode == "conditional":
+                mt = re.search(r"true_computation=%?([\w.\-]+)", op.line)
+                mf = re.search(r"false_computation=%?([\w.\-]+)", op.line)
+                if mt:
+                    visit(mt.group(1), mult * cond_true_weight, traffic)
+                if mf:
+                    visit(mf.group(1), mult * cond_false_weight, traffic)
+                mb = re.search(r"branch_computations={([^}]*)}", op.line)
+                if mb:
+                    for b in _NAME_RE.findall(mb.group(1)):
+                        visit(b, mult, traffic)
+            else:
+                # fusion/reduce bodies: count dots, not traffic (registers)
+                for attr in ("calls=", "to_apply="):
+                    if attr in op.line:
+                        tgt = _NAME_RE.findall(
+                            op.line.split(attr, 1)[1].split(",")[0])
+                        for t in tgt:
+                            visit(t, mult, False)
+        seen_stack.pop()
+
+    visit(entry, 1.0, True)
+    return stats

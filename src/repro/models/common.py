@@ -1,0 +1,103 @@
+"""Shared model machinery: the IAAT matmul hook, norms, RoPE, init/spec
+utilities, and the backend switch (pallas kernels vs XLA-compilable
+reference paths — the latter is what the multi-pod dry-run compiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import dispatch
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Execution backend selector threaded through every layer."""
+    kind: str = "xla"             # "xla" | "pallas"
+    interpret: bool = True        # pallas interpret mode (CPU container)
+    iaat: bool = False            # route small matmuls through IAAT dispatch
+
+    @property
+    def pallas(self) -> bool:
+        return self.kind == "pallas"
+
+
+XLA = Backend("xla")
+PALLAS_INTERPRET = Backend("pallas", interpret=True, iaat=True)
+
+
+def mm(x: jax.Array, w: jax.Array, be: Backend) -> jax.Array:
+    """The framework matmul: every projection goes through here, so the
+    paper's input-aware dispatch applies uniformly."""
+    if be.iaat:
+        with dispatch.configure(backend="auto", interpret=be.interpret):
+            return dispatch.matmul(x, w.astype(x.dtype))
+    return jnp.matmul(x, w.astype(x.dtype))
+
+
+def rmsnorm(x: jax.Array, w: Optional[jax.Array], eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    if w is not None:
+        y = y * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D); positions: (B, S) or (S,)."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freq  # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# init / spec utilities.
+# --------------------------------------------------------------------------
+
+def ninit(key, shape, scale: float, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def stack_init(init_fn, key, n: int) -> Params:
+    """vmap a per-layer init over ``n`` layers -> stacked ("layers", ...)"""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def stack_specs(specs: Specs) -> Specs:
+    """Prepend the "layers" logical axis to every spec in the tree."""
+    return jax.tree.map(lambda s: ("layers",) + tuple(s), specs,
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def assert_same_structure(params: Params, specs: Specs) -> None:
+    pt = jax.tree.structure(params)
+    st = jax.tree.structure(specs, is_leaf=lambda s: isinstance(s, tuple))
+    if pt != st:
+        raise ValueError(f"param/spec structure drift:\n{pt}\nvs\n{st}")
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

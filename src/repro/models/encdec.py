@@ -1,0 +1,221 @@
+"""Encoder-decoder backbone (seamless-m4t-v2 assignment entry).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_src, d) from ``input_specs``.  The
+decoder is a causal LM stack with cross-attention into the encoder states;
+serving caches both the self-attention KV ring and the projected cross KV.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import (Backend, mm, ninit, rmsnorm, stack_init,
+                                 stack_specs)
+from repro.models.lm import LMCache, _remat
+
+
+def _norm(cfg, dtype):
+    return jnp.ones((cfg.d_model,), dtype) if cfg.parametric_norm else None
+
+
+def _init_enc_block(cfg: ModelConfig, dtype):
+    def init(key):
+        ks = jax.random.split(key, 2)
+        return {"ln1": _norm(cfg, dtype),
+                "attn": L.init_attention(ks[0], cfg, dtype),
+                "ln2": _norm(cfg, dtype),
+                "mlp": L.init_mlp(ks[1], cfg, dtype=dtype)}
+    return init
+
+
+def _init_dec_block(cfg: ModelConfig, dtype):
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {"ln1": _norm(cfg, dtype),
+                "self_attn": L.init_attention(ks[0], cfg, dtype),
+                "ln_x": _norm(cfg, dtype),
+                "cross_attn": L.init_attention(ks[1], cfg, dtype),
+                "ln2": _norm(cfg, dtype),
+                "mlp": L.init_mlp(ks[2], cfg, dtype=dtype)}
+    return init
+
+
+def init_encdec(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    d, Vp = cfg.d_model, cfg.vocab_padded
+    return {
+        "embed": ninit(ks[0], (Vp, d), d ** -0.5, dtype),
+        "enc_blocks": stack_init(_init_enc_block(cfg, dtype), ks[1],
+                                 cfg.n_encoder_layers),
+        "enc_norm": _norm(cfg, dtype),
+        "dec_blocks": stack_init(_init_dec_block(cfg, dtype), ks[2],
+                                 cfg.n_layers),
+        "final_norm": _norm(cfg, dtype),
+        "unembed": ninit(ks[3], (d, Vp), 1.0 / math.sqrt(d), dtype),
+    }
+
+
+def encdec_specs(cfg: ModelConfig) -> Dict:
+    n = ("embed",) if cfg.parametric_norm else None
+    a = L.attention_specs(cfg)
+    m = L.mlp_specs(cfg)
+    return {
+        "embed": ("vocab", None),
+        "enc_blocks": stack_specs({"ln1": n, "attn": a, "ln2": n, "mlp": m}),
+        "enc_norm": n,
+        "dec_blocks": stack_specs({"ln1": n, "self_attn": a, "ln_x": n,
+                                   "cross_attn": a, "ln2": n, "mlp": m}),
+        "final_norm": n,
+        "unembed": (None, "vocab"),
+    }
+
+
+def encode(params, cfg: ModelConfig, be: Backend, src_embeds) -> jax.Array:
+    """src_embeds: (B, S_src, d) (stubbed frontend output)."""
+    x = src_embeds.astype(cfg.compute_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, blk):
+        h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+        x = x + L.attention(blk["attn"], h, be, cfg, causal=False,
+                            positions=positions)
+        h = rmsnorm(x, blk["ln2"], cfg.norm_eps)
+        return x + L.mlp(blk["mlp"], h, be), None
+
+    x, _ = lax.scan(_remat(body, cfg), x, params["enc_blocks"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(blk, enc, cfg, be):
+    Hkv, hd = cfg.n_kv_heads_padded, cfg.head_dim_
+    B, Ssrc, _ = enc.shape
+    k = mm(enc, blk["cross_attn"]["wk"], be).reshape(
+        B, Ssrc, Hkv, hd).transpose(0, 2, 1, 3)
+    v = mm(enc, blk["cross_attn"]["wv"], be).reshape(
+        B, Ssrc, Hkv, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def _dec_block(blk, x, enc_or_kv, cfg, be, *, positions=None, kv=None,
+               pos=None, precomputed_cross: bool = False):
+    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+    out = L.attention(blk["self_attn"], h, be, cfg, causal=True,
+                      positions=positions, kv_cache=kv, pos=pos)
+    if kv is not None:
+        sa, kv_new = out
+    else:
+        sa, kv_new = out, None
+    x = x + sa
+    h = rmsnorm(x, blk["ln_x"], cfg.norm_eps)
+    ckv = enc_or_kv if precomputed_cross else _cross_kv(blk, enc_or_kv, cfg, be)
+    x = x + L.attention(blk["cross_attn"], h, be, cfg, cross_kv=ckv)
+    h = rmsnorm(x, blk["ln2"], cfg.norm_eps)
+    return x + L.mlp(blk["mlp"], h, be), kv_new
+
+
+def forward_train(params, cfg: ModelConfig, be: Backend, tokens,
+                  src_embeds) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced training: (logits (B, S_tgt, Vp), aux=0)."""
+    enc = encode(params, cfg, be, src_embeds)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, blk):
+        x, _ = _dec_block(blk, x, enc, cfg, be, positions=positions)
+        return x, None
+
+    x, _ = lax.scan(_remat(body, cfg), x, params["dec_blocks"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return mm(x, params["unembed"], be), jnp.zeros((), jnp.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EncDecCache:
+    pos: jax.Array
+    self_k: jax.Array            # (L, B, Hkv, W, hd)
+    self_v: jax.Array
+    cross_k: jax.Array           # (L, B, Hkv, S_src, hd)
+    cross_v: jax.Array
+
+    def tree_flatten(self):
+        return ((self.pos, self.self_k, self.self_v, self.cross_k,
+                 self.cross_v), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, src_len: int,
+               dtype=jnp.bfloat16, prefill_len: int = 0) -> EncDecCache:
+    Hkv, hd, Ld = cfg.n_kv_heads_padded, cfg.head_dim_, cfg.n_layers
+    return EncDecCache(
+        pos=jnp.asarray(prefill_len, jnp.int32),
+        self_k=jnp.zeros((Ld, batch, Hkv, seq_len, hd), dtype),
+        self_v=jnp.zeros((Ld, batch, Hkv, seq_len, hd), dtype),
+        cross_k=jnp.zeros((Ld, batch, Hkv, src_len, hd), dtype),
+        cross_v=jnp.zeros((Ld, batch, Hkv, src_len, hd), dtype),
+    )
+
+
+def prefill(params, cfg: ModelConfig, be: Backend, tokens, src_embeds,
+            cache_len: Optional[int] = None
+            ) -> Tuple[jax.Array, EncDecCache]:
+    enc = encode(params, cfg, be, src_embeds)
+    B, Stgt = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    positions = jnp.arange(Stgt)
+
+    def body(x, blk):
+        h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+        sa, (k, v) = L.attention(blk["self_attn"], h, be, cfg, causal=True,
+                                 positions=positions, return_kv=True)
+        x = x + sa
+        h = rmsnorm(x, blk["ln_x"], cfg.norm_eps)
+        ck, cv = _cross_kv(blk, enc, cfg, be)
+        x = x + L.attention(blk["cross_attn"], h, be, cfg, cross_kv=(ck, cv))
+        h = rmsnorm(x, blk["ln2"], cfg.norm_eps)
+        return x + L.mlp(blk["mlp"], h, be), (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = lax.scan(body, x, params["dec_blocks"])
+    W = cache_len or Stgt
+    if W > Stgt:
+        pad = ((0, 0),) * 3 + ((0, W - Stgt), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = EncDecCache(pos=jnp.asarray(Stgt, jnp.int32),
+                        self_k=ks.astype(cfg.compute_dtype),
+                        self_v=vs.astype(cfg.compute_dtype),
+                        cross_k=cks.astype(cfg.compute_dtype),
+                        cross_v=cvs.astype(cfg.compute_dtype))
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return mm(x, params["unembed"], be)[:, 0], cache
+
+
+def decode(params, cfg: ModelConfig, be: Backend, tokens,
+           cache: EncDecCache) -> Tuple[jax.Array, EncDecCache]:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    pos = cache.pos
+
+    def body(x, xs):
+        blk, kb, vb, ck, cv = xs
+        x, (kn, vn) = _dec_block(blk, x, (ck, cv), cfg, be, kv=(kb, vb),
+                                 pos=pos, precomputed_cross=True)
+        return x, (kn, vn)
+
+    x, (kn, vn) = lax.scan(body, x, (params["dec_blocks"], cache.self_k,
+                                     cache.self_v, cache.cross_k,
+                                     cache.cross_v))
+    cache = EncDecCache(pos=pos + 1, self_k=kn, self_v=vn,
+                        cross_k=cache.cross_k, cross_v=cache.cross_v)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return mm(x, params["unembed"], be)[:, 0], cache

@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (per the assignment: `[audio]`/`[vlm]` entries
+specify the transformer backbone only; ``input_specs()`` provides
+precomputed frame/patch embeddings).
+
+These helpers exist so smoke tests / examples can fabricate plausible
+frontend outputs, and so the shape contract is written down in one place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int, seq_len: int):
+    """Shape of the precomputed embeddings the backbone consumes."""
+    if cfg.frontend == "vision":
+        return (batch, cfg.frontend_tokens, cfg.d_model)
+    if cfg.frontend == "audio":
+        return (batch, seq_len, cfg.d_model)   # encoder frames
+    return None
+
+
+def fake_frontend(key, cfg: ModelConfig, batch: int, seq_len: int,
+                  dtype=jnp.bfloat16) -> jax.Array:
+    shape = frontend_embed_shape(cfg, batch, seq_len)
+    if shape is None:
+        raise ValueError(f"{cfg.name} has no frontend")
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.02
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text tokens accompanying the frontend prefix (VLM)."""
+    if cfg.frontend == "vision":
+        return seq_len - cfg.frontend_tokens
+    return seq_len

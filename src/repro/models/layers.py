@@ -1,0 +1,337 @@
+"""Transformer layers: GQA attention (full / sliding-window / cross),
+gated MLP, and capacity-routed MoE with sort-based dispatch.
+
+Every projection goes through ``common.mm`` (the IAAT dispatch hook); the
+attention inner loop switches between the Pallas flash kernel and the
+chunked-XLA oracle by ``Backend``; MoE expert compute switches between
+``ops.batched_gemm`` (Pallas, the paper's batched-small-GEMM habitat) and
+a batched einsum (XLA path for the multi-pod dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref
+from repro.models.common import Backend, mm, ninit, rmsnorm, rope
+from repro.parallel.ctx import constrain
+
+
+# --------------------------------------------------------------------------
+# Attention.
+# --------------------------------------------------------------------------
+
+def _zero_pad_cols(w, cols: int):
+    return jnp.pad(w, ((0, 0), (0, cols - w.shape[1]))) \
+        if cols > w.shape[1] else w
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    Hp, Hkvp = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(H * hd) / math.sqrt(2.0 * cfg.n_layers)
+    # dead (padding) heads are ZERO so they contribute nothing and their
+    # gradients are identically zero (see ModelConfig.head_pad_multiple)
+    wq = _zero_pad_cols(ninit(ks[0], (d, H * hd), s, dtype), Hp * hd)
+    wk = _zero_pad_cols(ninit(ks[1], (d, Hkv * hd), s, dtype), Hkvp * hd)
+    wv = _zero_pad_cols(ninit(ks[2], (d, Hkv * hd), s, dtype), Hkvp * hd)
+    wo = _zero_pad_cols(ninit(ks[3], (H * hd, d), so, dtype).T,
+                        Hp * hd).T
+    return {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+
+
+def attention_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+def _split_heads(x, n, hd):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    B, H, S, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+
+def _full_attn(q, k, v, be: Backend, *, causal, window, q_offset, scale):
+    if be.pallas:
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, scale=scale,
+                                   bq=min(128, q.shape[2]),
+                                   interpret=be.interpret)
+    return ref.chunked_mha(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, scale=scale,
+                           kv_chunk=min(1024, k.shape[2]))
+
+
+def decode_attend(q, k_buf, v_buf, pos, *, window: Optional[int],
+                  scale: float):
+    """One-token attention over a (ring) KV buffer.
+
+    q: (B, H, 1, hd); k_buf/v_buf: (B, Hkv, W, hd); ``pos`` is the position
+    of the query token (the buffer already contains it at slot pos % W).
+    Slot s holds position  p_s = pos - ((pos - s) mod W)  — for a
+    full-length buffer this degenerates to p_s = s, so one formula covers
+    both the ring (sliding-window) and the linear (full) cache."""
+    B, H, _, hd = q.shape
+    Hkv, W = k_buf.shape[1], k_buf.shape[2]
+    rep = H // Hkv
+    s_idx = jnp.arange(W)
+    p_s = pos - jnp.mod(pos - s_idx, W)
+    ok = p_s >= 0
+    if window is not None:
+        ok &= p_s > pos - window
+    qf = q.reshape(B, Hkv, rep, hd)
+    # preferred_element_type keeps the accumulation in f32 WITHOUT
+    # materialising an f32 copy of the (huge) KV buffers
+    logits = jnp.einsum("bkrd,bksd->bkrs", qf, k_buf,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(ok[None, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrs,bksd->bkrd", p.astype(v_buf.dtype), v_buf,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, 1, hd).astype(q.dtype)
+
+
+def attention(p: Dict, x, be: Backend, cfg: ModelConfig, *,
+              causal: bool = True, window: Optional[int] = None,
+              positions=None, kv_cache: Optional[Tuple] = None,
+              pos=None, cross_kv: Optional[Tuple] = None,
+              return_kv: bool = False):
+    """Unified attention layer.
+
+    Modes:
+      train/prefill: kv_cache None; positions (S,) or (B,S).
+      decode:        kv_cache (k_buf, v_buf); pos scalar; x is (B,1,d).
+      cross:         cross_kv (k, v) precomputed from encoder states.
+    Returns y [, new_kv or (k,v) when return_kv]."""
+    H, Hkv, hd = cfg.n_heads_padded, cfg.n_kv_heads_padded, cfg.head_dim_
+    scale = hd ** -0.5
+    B, S, _ = x.shape
+    q = _split_heads(mm(x, p["wq"], be), H, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        if positions is None and kv_cache is None:
+            pass
+        y = _full_attn(q, k, v, be, causal=False, window=None, q_offset=0,
+                       scale=scale)
+        return mm(_merge_heads(y), p["wo"], be)
+    q = constrain(q, "batch", "heads", None, None)
+    k = _split_heads(mm(x, p["wk"], be), Hkv, hd)
+    v = _split_heads(mm(x, p["wv"], be), Hkv, hd)
+    k = constrain(k, "batch", "kv", None, None)
+    v = constrain(v, "batch", "kv", None, None)
+    if kv_cache is not None:
+        # decode: rope at absolute position, ring-write, attend buffer
+        k_buf, v_buf = kv_cache
+        W = k_buf.shape[2]
+        pos_arr = jnp.full((B, 1), pos, jnp.int32)
+        q = rope(q, pos_arr, cfg.rope_theta)
+        k = rope(k, pos_arr, cfg.rope_theta)
+        slot = jnp.mod(pos, W).astype(jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        idx = (zero, zero, slot, zero)
+        k_buf = lax.dynamic_update_slice(k_buf, k.astype(k_buf.dtype), idx)
+        v_buf = lax.dynamic_update_slice(v_buf, v.astype(v_buf.dtype), idx)
+        y = decode_attend(q, k_buf, v_buf, pos, window=window, scale=scale)
+        return mm(_merge_heads(y), p["wo"], be), (k_buf, v_buf)
+    if positions is None:
+        positions = jnp.arange(S)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    y = _full_attn(q, k, v, be, causal=causal, window=window, q_offset=0,
+                   scale=scale)
+    out = mm(_merge_heads(y), p["wo"], be)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (SwiGLU).
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    sd = 1.0 / math.sqrt(ff) / math.sqrt(2.0 * cfg.n_layers)
+    return {"wg": ninit(ks[0], (d, ff), s, dtype),
+            "wu": ninit(ks[1], (d, ff), s, dtype),
+            "wd": ninit(ks[2], (ff, d), sd, dtype)}
+
+
+def mlp_specs(cfg: ModelConfig) -> Dict:
+    return {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+            "wd": ("mlp", "embed")}
+
+
+def mlp(p: Dict, x, be: Backend):
+    h = jax.nn.silu(mm(x, p["wg"], be)) * mm(x, p["wu"], be)
+    h = constrain(h, "batch", None, "mlp")
+    return mm(h, p["wd"], be)
+
+
+# --------------------------------------------------------------------------
+# MoE: top-k routing, sort-based capacity dispatch, grouped small GEMM.
+# --------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.num_experts, m.d_expert
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    sd = 1.0 / math.sqrt(f) / math.sqrt(2.0 * cfg.n_layers)
+    return {
+        "router": ninit(ks[0], (d, E), s, jnp.float32),
+        "w_gate": ninit(ks[1], (E, d, f), s, dtype),
+        "w_up": ninit(ks[2], (E, d, f), s, dtype),
+        "w_down": ninit(ks[3], (E, f, d), sd, dtype),
+    }
+
+
+def moe_specs(cfg: ModelConfig) -> Dict:
+    return {"router": ("embed", None),
+            "w_gate": ("experts", "embed", "expert_mlp"),
+            "w_up": ("experts", "embed", "expert_mlp"),
+            "w_down": ("experts", "expert_mlp", "embed")}
+
+
+def _capacity(T: int, m) -> int:
+    c = int(math.ceil(T * m.top_k / m.num_experts * m.capacity_factor))
+    # 128-multiples: MXU-aligned AND divisible by the data axis so the
+    # (E, C, d) dispatch buffer shards its capacity dim
+    grain = 128 if c >= 128 else 8
+    return max(grain, -(c // -grain) * grain)
+
+
+def _moe_dispatch(router, xf, cfg: ModelConfig, C: int):
+    """Route + sort + capacity for one token shard.  xf: (T, d).
+
+    Returns (buf (E, C, d), combine metadata, aux).  Gather-only data
+    movement: the ONLY scatters are int32 slot maps (a (T*k, d) row
+    scatter lowers to a per-element sort on some backends — measured
+    7.5 GiB u32 temps)."""
+    m = cfg.moe
+    T, d = xf.shape
+    E, k = m.num_experts, m.top_k
+
+    logits = jnp.matmul(xf.astype(jnp.float32), router)           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, k)                            # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                                    # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    stok = (jnp.arange(T * k) // k)[order]
+    counts = jnp.bincount(flat_e, length=E)                       # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * k) - starts[se]
+    keep = rank < C
+    dest = jnp.where(keep, se * C + rank, E * C)                  # OOB=drop
+
+    inv = jnp.zeros((E * C + 1,), jnp.int32).at[dest].set(
+        stok, mode="drop")                                        # slot->token
+    filled = jnp.zeros((E * C + 1,), jnp.bool_).at[dest].set(
+        keep, mode="drop")
+    buf = jnp.where(filled[:E * C, None],
+                    xf.at[inv[:E * C]].get(mode="clip"), 0)
+    slot_flat = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        jnp.where(keep, dest, E * C).astype(jnp.int32))           # (T*k,)
+
+    me = probs.mean(0)                                            # (E,)
+    ce = (counts / jnp.maximum(counts.sum(), 1)).astype(jnp.float32)
+    aux = m.aux_loss * E * jnp.sum(me * ce) \
+        + m.router_z_loss * jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+    return buf.reshape(E, C, d), (slot_flat, top_p), aux
+
+
+def _moe_combine(out_buf, meta, T: int, k: int):
+    """Per-token gather of its k expert rows (no (T, d) scatter); the
+    weighted sum runs in bf16 with an f32 accumulator so any cross-shard
+    reduction moves bf16, not f32."""
+    slot_flat, top_p = meta
+    EC, d = out_buf.shape[0] * out_buf.shape[1], out_buf.shape[2]
+    rows = out_buf.reshape(EC, d).at[slot_flat].get(
+        mode="fill", fill_value=0).reshape(T, k, d)
+    # plain (non-f32-accumulated) einsum: k <= 8 terms, and an f32
+    # preferred type would make the rows cotangent f32 — doubling the EP
+    # combine all-reduce
+    return jnp.einsum("tkd,tk->td", rows, top_p.astype(rows.dtype))
+
+
+def _expert_ffn(p, buf, be: Backend, x_dtype):
+    """(…, E, C, d) @ experts — grouped small GEMMs (the paper's habitat)."""
+    wg = p["w_gate"].astype(x_dtype)
+    wu = p["w_up"].astype(x_dtype)
+    wd = p["w_down"].astype(x_dtype)
+    if be.pallas and buf.ndim == 3:
+        from repro.kernels import ops
+        h = (jax.nn.silu(ops.batched_gemm(buf, wg, interpret=be.interpret))
+             * ops.batched_gemm(buf, wu, interpret=be.interpret))
+        return ops.batched_gemm(h, wd, interpret=be.interpret)
+    eq = "ecd,edf->ecf" if buf.ndim == 3 else "gecd,edf->gecf"
+    eq2 = "ecf,efd->ecd" if buf.ndim == 3 else "gecf,efd->gecd"
+    h = jax.nn.silu(jnp.einsum(eq, buf, wg)) * jnp.einsum(eq, buf, wu)
+    if buf.ndim == 4:
+        h = constrain(h, "moe_group", "experts", None, "expert_mlp")
+    out = jnp.einsum(eq2, h, wd)
+    if buf.ndim == 4:
+        out = constrain(out, "moe_group", "experts", None, None)
+    return out
+
+
+def moe(p: Dict, x, be: Backend, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux).
+
+    §Perf iteration 2/4 (beyond-paper): dispatch and combine run PER DATA
+    SHARD via a vmapped leading group axis sized to the data-parallel
+    degree; the group axis is sharded over "data" so routing / sort /
+    capacity / token gathers are embarrassingly parallel (zero cross-device
+    token movement; capacity is per-shard, the standard per-device
+    semantics).  The expert FFN itself runs OUTSIDE the vmap on the
+    (G, E, C, d) buffer with explicit shardings: E over model (EP,
+    moonshot) or the expert hidden dim over model (TP, mixtral)."""
+    from repro.parallel.ctx import moe_shard_count
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    k = m.top_k
+    G = moe_shard_count()
+    if G <= 1 or T % G or (T // G) % 8:
+        buf, meta, aux = _moe_dispatch(p["router"], x.reshape(T, d), cfg,
+                                       _capacity(T, m))
+        out_buf = _expert_ffn(p, buf, be, x.dtype)
+        y = _moe_combine(out_buf, meta, T, k)
+        return y.astype(x.dtype).reshape(B, S, d), aux
+    T_loc = T // G
+    C = _capacity(T_loc, m)
+    xg = constrain(x.reshape(G, T_loc, d), "moe_group", None, None)
+    buf, meta, aux = jax.vmap(
+        lambda xs: _moe_dispatch(p["router"], xs, cfg, C))(xg)
+    buf = constrain(buf, "moe_group", "experts", None, None)
+    slot = constrain(meta[0], "moe_group", None)
+    top_p = constrain(meta[1], "moe_group", None, None)
+    out_buf = _expert_ffn(p, buf, be, x.dtype)
+    yg = jax.vmap(lambda ob, sl, tp: _moe_combine(ob, (sl, tp), T_loc, k))(
+        out_buf, slot, top_p)
+    yg = constrain(yg, "moe_group", None, None)
+    return yg.astype(x.dtype).reshape(B, S, d), aux.mean()

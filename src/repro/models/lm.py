@@ -1,0 +1,474 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid families.
+
+One parameter schema + three entry points (`forward_train`, `prefill`,
+`decode`), all built on a remat'd ``lax.scan`` over stacked layer params
+(compile time stays O(1) in depth — mandatory for the 81-layer zamba2 and
+56-layer mixtral dry-runs).
+
+Family wiring:
+  dense / vlm   uniform [attn + mlp] blocks; attention pattern full /
+                swa / local:global (per-layer lax.cond, both branches
+                compiled once).
+  moe           [attn + moe] blocks, aux loss accumulated in the carry.
+  ssm           [mamba] blocks (attention-free).
+  hybrid        [mamba] blocks + ONE shared [attn + mlp] block (zamba2
+                style) applied every ``shared_attn_every`` layers; its
+                params are closed over (true weight sharing), its KV cache
+                is indexed per application.
+VLM (internvl2) enters through ``prefix_embeds`` (the stubbed ViT
+frontend); audio enc-dec lives in encdec.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.common import (Backend, assert_same_structure, mm, ninit,
+                                 rmsnorm, stack_init, stack_specs)
+
+
+# --------------------------------------------------------------------------
+# Cache pytree.
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LMCache:
+    pos: jax.Array                              # scalar int32: next position
+    attn_k: Optional[jax.Array] = None          # (L, B, Hkv, W, hd)
+    attn_v: Optional[jax.Array] = None
+    conv: Optional[jax.Array] = None            # (L, B, K-1, ch)
+    ssm: Optional[jax.Array] = None             # (L, B, nh, P, N)
+    shared_k: Optional[jax.Array] = None        # (napps, B, Hkv, W, hd)
+    shared_v: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        return ((self.pos, self.attn_k, self.attn_v, self.conv, self.ssm,
+                 self.shared_k, self.shared_v), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _n_shared_apps(cfg: ModelConfig) -> int:
+    return -(cfg.n_layers // -cfg.shared_attn_every) \
+        if cfg.shared_attn_every else 0
+
+
+def cache_buffer_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring-buffer length: window-sized iff NO layer needs full context."""
+    a = cfg.attn
+    if cfg.family in ("ssm",):
+        return 0
+    if a.kind == "swa" and not cfg.shared_attn_every:
+        return min(a.window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16, prefill_len: int = 0) -> LMCache:
+    W = cache_buffer_len(cfg, seq_len)
+    Hkv = cfg.n_kv_heads_padded
+    hd = cfg.head_dim_ if cfg.n_heads else 0
+    kw: Dict[str, Any] = {"pos": jnp.asarray(prefill_len, jnp.int32)}
+    Ld = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        kw["attn_k"] = jnp.zeros((Ld, batch, Hkv, W, hd), dtype)
+        kw["attn_v"] = jnp.zeros((Ld, batch, Hkv, W, hd), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        ch = cfg.d_inner + 2 * s.d_state
+        kw["conv"] = jnp.zeros((Ld, batch, s.d_conv - 1, ch), dtype)
+        kw["ssm"] = jnp.zeros((Ld, batch, cfg.ssm_heads, s.head_dim,
+                               s.d_state), jnp.float32)
+    if cfg.shared_attn_every:
+        na = _n_shared_apps(cfg)
+        kw["shared_k"] = jnp.zeros((na, batch, Hkv, W, hd), dtype)
+        kw["shared_v"] = jnp.zeros((na, batch, Hkv, W, hd), dtype)
+    return LMCache(**kw)
+
+
+# --------------------------------------------------------------------------
+# Init / specs.
+# --------------------------------------------------------------------------
+
+def _norm_w(cfg: ModelConfig, dtype):
+    return jnp.ones((cfg.d_model,), dtype) if cfg.parametric_norm else None
+
+
+def _init_block(cfg: ModelConfig, dtype):
+    def init(key):
+        ks = jax.random.split(key, 2)
+        if cfg.family in ("ssm", "hybrid"):
+            return {"ln1": _norm_w(cfg, dtype),
+                    "mixer": S.init_mamba(ks[0], cfg, dtype)}
+        p = {"ln1": _norm_w(cfg, dtype),
+             "attn": L.init_attention(ks[0], cfg, dtype),
+             "ln2": _norm_w(cfg, dtype)}
+        if cfg.family == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg, dtype=dtype)
+        return p
+    return init
+
+
+def _block_specs(cfg: ModelConfig):
+    n = ("embed",) if cfg.parametric_norm else None
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ln1": n, "mixer": S.mamba_specs(cfg)}
+    sp = {"ln1": n, "attn": L.attention_specs(cfg), "ln2": n}
+    if cfg.family == "moe":
+        sp["moe"] = L.moe_specs(cfg)
+    else:
+        sp["mlp"] = L.mlp_specs(cfg)
+    return sp
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    d, Vp = cfg.d_model, cfg.vocab_padded
+    params: Dict[str, Any] = {
+        "embed": ninit(ks[0], (Vp, d), d ** -0.5, dtype),
+        "blocks": stack_init(_init_block(cfg, dtype), ks[1], cfg.n_layers),
+        "final_norm": _norm_w(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = ninit(ks[2], (d, Vp), 1.0 / math.sqrt(d), dtype)
+    if cfg.shared_attn_every:
+        kk = jax.random.split(ks[3], 2)
+        params["shared"] = {
+            "ln1": _norm_w(cfg, dtype),
+            "attn": L.init_attention(kk[0], cfg, dtype),
+            "ln2": _norm_w(cfg, dtype),
+            "mlp": L.init_mlp(kk[1], cfg, dtype=dtype),
+        }
+    return params
+
+
+def lm_specs(cfg: ModelConfig) -> Dict:
+    n = ("embed",) if cfg.parametric_norm else None
+    # embed/unembed shard ONLY the vocab dim (model axis): FSDP-sharding
+    # the d_model dim forced a d-contracting logits matmul => a (B,S,V)
+    # psum over data, and an 'involuntary full rematerialization' reshard
+    # on the gather (§Perf iteration 3); vocab-only sharding removes both
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", None),
+        "blocks": stack_specs(_block_specs(cfg)),
+        "final_norm": n,
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = (None, "vocab")
+    if cfg.shared_attn_every:
+        specs["shared"] = {"ln1": n, "attn": L.attention_specs(cfg),
+                           "ln2": n, "mlp": L.mlp_specs(cfg)}
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Block application (shared by all modes).
+# --------------------------------------------------------------------------
+
+def _window_for_layer(cfg: ModelConfig, i):
+    """Static-pattern helper; returns (needs_cond, window)."""
+    a = cfg.attn
+    if a.kind == "swa":
+        return False, a.window
+    if a.kind == "local_global":
+        return True, a.window
+    return False, None
+
+
+def _apply_attn_block(p, x, be, cfg, i, *, kv=None, pos=None,
+                      positions=None, return_kv=False):
+    """attention (+cond on local/global) + mlp/moe. Returns
+    (y, aux, new_kv_or_kv_pair)."""
+    needs_cond, win = _window_for_layer(cfg, i)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+
+    def run(window):
+        return L.attention(p["attn"], h, be, cfg, causal=True, window=window,
+                           positions=positions, kv_cache=kv, pos=pos,
+                           return_kv=return_kv)
+
+    if needs_cond:
+        is_global = (i % (cfg.attn.local_ratio + 1)) == cfg.attn.local_ratio
+        out = lax.cond(is_global, lambda: run(None), lambda: run(win))
+    else:
+        out = run(win)
+    if kv is not None or return_kv:
+        attn_out, kv_out = out
+    else:
+        attn_out, kv_out = out, None
+    x = x + attn_out
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = L.moe(p["moe"], h2, be, cfg)
+    else:
+        y = L.mlp(p["mlp"], h2, be)
+    return x + y, aux, kv_out
+
+
+def _apply_mamba_block(p, x, be, cfg, *, state=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if state is not None:
+        y, new_state = S.mamba(p["mixer"], h, be, cfg, state=state)
+        return x + y, new_state
+    return x + S.mamba(p["mixer"], h, be, cfg), None
+
+
+def _maybe_shared(params, x, be, cfg, i, *, shared_kv=None, pos=None,
+                  positions=None, return_kv=False):
+    """Hybrid: apply the shared attn block when i % every == 0."""
+    if not cfg.shared_attn_every:
+        return x, shared_kv
+    sp = params["shared"]
+
+    def apply(x):
+        y, _, kv_out = _apply_attn_block(sp, x, be, cfg, i, kv=shared_kv,
+                                         pos=pos, positions=positions,
+                                         return_kv=return_kv)
+        return y, kv_out
+
+    def skip(x):
+        if shared_kv is not None or return_kv:
+            dummy = shared_kv
+            if dummy is None:
+                # return_kv path needs consistent shapes; build zeros
+                B, Ssz, _ = x.shape
+                hd, Hkv = cfg.head_dim_, cfg.n_kv_heads_padded
+                z = jnp.zeros((B, Hkv, Ssz, hd), x.dtype)
+                dummy = (z, z)
+            return x, dummy
+        return x, None
+
+    return lax.cond(i % cfg.shared_attn_every == 0,
+                    apply, skip, x)
+
+
+# --------------------------------------------------------------------------
+# Forward (train).
+# --------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg, tokens, be, prefix_embeds=None):
+    from repro.parallel.ctx import constrain
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.compute_dtype), x],
+                            axis=1)
+    return constrain(x, "batch", None, None)
+
+
+def _unembed(params, cfg, x, be: Backend):
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return mm(x, w, be)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def forward_train(params: Dict, cfg: ModelConfig, be: Backend,
+                  tokens: jax.Array,
+                  prefix_embeds: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S_text) -> (logits (B, S_total, Vp), aux_loss)."""
+    x = _embed_tokens(params, cfg, tokens, be, prefix_embeds)
+    B, Stot, _ = x.shape
+    positions = jnp.arange(Stot)
+    idxs = jnp.arange(cfg.n_layers)
+
+    if cfg.family in ("ssm", "hybrid"):
+        def body(carry, xs):
+            x = carry
+            blk, i = xs
+            x, _ = _maybe_shared(params, x, be, cfg, i, positions=positions)
+            x, _ = _apply_mamba_block(blk, x, be, cfg)
+            return x, None
+        x, _ = lax.scan(_remat(body, cfg), x, (params["blocks"], idxs))
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        def body(carry, xs):
+            x, aux = carry
+            blk, i = xs
+            x, a, _ = _apply_attn_block(blk, x, be, cfg, i,
+                                        positions=positions)
+            return (x, aux + a), None
+        (x, aux), _ = lax.scan(_remat(body, cfg),
+                               (x, jnp.zeros((), jnp.float32)),
+                               (params["blocks"], idxs))
+        aux = aux / cfg.n_layers
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x, be), aux
+
+
+# --------------------------------------------------------------------------
+# Prefill / decode (serving).
+# --------------------------------------------------------------------------
+
+def _ring_layout(k, W: int):
+    """Reorder the last W positions of k (B,H,S,hd) into ring-slot order."""
+    Ssz = k.shape[2]
+    if W >= Ssz:
+        return k, Ssz
+    slots = (Ssz - W) + jnp.mod(jnp.arange(W) - Ssz, W)
+    return jnp.take(k, slots, axis=2), W
+
+
+def _ring_pad(k, W: int, dtype):
+    """Ring-layout + pad to exactly W slots (applied INSIDE the prefill
+    layer scan so the stacked cache is (L,B,H,W,hd), never (L,B,H,S,hd) —
+    for sliding-window archs at 32k that is a ~8x cache-stack saving)."""
+    kr, have = _ring_layout(k, W)
+    if have < W:
+        kr = jnp.pad(kr, ((0, 0),) * 2 + ((0, W - have), (0, 0)))
+    return kr.astype(dtype)
+
+
+def prefill(params: Dict, cfg: ModelConfig, be: Backend, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            cache_len: Optional[int] = None
+            ) -> Tuple[jax.Array, LMCache]:
+    """Run the prompt, return (last-token logits (B, Vp), primed cache)."""
+    x = _embed_tokens(params, cfg, tokens, be, prefix_embeds)
+    B, Stot, _ = x.shape
+    cache_len = cache_len or Stot
+    cache = init_cache(cfg, B, cache_len, cfg.compute_dtype,
+                       prefill_len=Stot)
+    positions = jnp.arange(Stot)
+    idxs = jnp.arange(cfg.n_layers)
+    W = cache_buffer_len(cfg, cache_len)
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared_ks, shared_vs = [], []
+
+        def body(carry, xs):
+            x = carry
+            blk, i = xs
+            x, skv = _maybe_shared(params, x, be, cfg, i,
+                                   positions=positions, return_kv=True)
+            if cfg.shared_attn_every:
+                skv = (_ring_pad(skv[0], W, cfg.compute_dtype),
+                       _ring_pad(skv[1], W, cfg.compute_dtype))
+            # mamba with state capture
+            h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+            y, st = _mamba_prefill(blk["mixer"], h, be, cfg)
+            return x + y, (st, skv)
+        x, (states, skvs) = lax.scan(body, x, (params["blocks"], idxs))
+        conv_states, ssm_states = states
+        cache.conv = conv_states
+        cache.ssm = ssm_states
+        if cfg.shared_attn_every:
+            ks_, vs_ = skvs
+            napps = _n_shared_apps(cfg)
+            app_layers = jnp.arange(napps) * cfg.shared_attn_every
+            cache.shared_k = ks_[app_layers]
+            cache.shared_v = vs_[app_layers]
+        aux = None
+    else:
+        def body(carry, xs):
+            x = carry
+            blk, i = xs
+            x, _, kv = _apply_attn_block(blk, x, be, cfg, i,
+                                         positions=positions, return_kv=True)
+            return x, (_ring_pad(kv[0], W, cfg.compute_dtype),
+                       _ring_pad(kv[1], W, cfg.compute_dtype))
+        x, (ks_, vs_) = lax.scan(body, x, (params["blocks"], idxs))
+        cache.attn_k = ks_
+        cache.attn_v = vs_
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x, be)[:, 0]
+    return logits, cache
+
+
+def _mamba_prefill(p, h, be, cfg):
+    """Mamba forward that also returns (conv_state, ssm_state)."""
+    from repro.kernels import ref as R
+    s = cfg.ssm
+    B, Ssz, d = h.shape
+    di, N, nh, P = cfg.d_inner, s.d_state, cfg.ssm_heads, s.head_dim
+    z, xs, Bm, Cm, dt = S._project(p, h, cfg, be)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    A = -jnp.exp(p["A_log"])
+    conv_out = jax.nn.silu(S._causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs_c = conv_out[..., :di].reshape(B, Ssz, nh, P)
+    B_c = conv_out[..., di:di + N].reshape(B, Ssz, 1, N)
+    C_c = conv_out[..., di + N:].reshape(B, Ssz, 1, N)
+    dt_c = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, h_final = R.ref_ssd(xs_c, dt_c, A, B_c, C_c, D_skip=p["D"],
+                           chunk=s.chunk, return_state=True)
+    y = y.astype(jnp.float32).reshape(B, Ssz, di)
+    y = rmsnorm((y.astype(h.dtype)
+                 * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)),
+                p["norm_w"], cfg.norm_eps)
+    out = mm(y, p["out_proj"], be)
+    Kc = s.d_conv - 1
+    conv_state = conv_in[:, -Kc:].astype(h.dtype)
+    if Ssz < Kc:
+        conv_state = jnp.pad(conv_in, ((0, 0), (Kc - Ssz, 0), (0, 0))) \
+            .astype(h.dtype)
+    return out, (conv_state, h_final)
+
+
+def decode(params: Dict, cfg: ModelConfig, be: Backend, tokens: jax.Array,
+           cache: LMCache) -> Tuple[jax.Array, LMCache]:
+    """One-token step. tokens: (B, 1). Returns (logits (B, Vp), cache)."""
+    x = _embed_tokens(params, cfg, tokens, be)
+    pos = cache.pos
+    idxs = jnp.arange(cfg.n_layers)
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared_kv_carry = (cache.shared_k, cache.shared_v)
+
+        def body(carry, xs):
+            x, sk, sv = carry
+            blk, i, conv, ssm_h = xs
+            if cfg.shared_attn_every:
+                app = i // cfg.shared_attn_every
+
+                def apply(x, sk, sv):
+                    kv = (sk[app], sv[app])
+                    y, _, kv_new = _apply_attn_block(
+                        params["shared"], x, be, cfg, i, kv=kv, pos=pos)
+                    sk = sk.at[app].set(kv_new[0])
+                    sv = sv.at[app].set(kv_new[1])
+                    return y, sk, sv
+
+                x, sk, sv = lax.cond(i % cfg.shared_attn_every == 0,
+                                     apply, lambda x, sk, sv: (x, sk, sv),
+                                     x, sk, sv)
+            x, st = _apply_mamba_block(blk, x, be, cfg, state=(conv, ssm_h))
+            return (x, sk, sv), st
+        (x, sk, sv), (conv_new, ssm_new) = lax.scan(
+            body, (x, cache.shared_k, cache.shared_v),
+            (params["blocks"], idxs, cache.conv, cache.ssm))
+        cache = LMCache(pos=pos + 1, conv=conv_new, ssm=ssm_new,
+                        shared_k=sk, shared_v=sv)
+    else:
+        def body(carry, xs):
+            x = carry
+            blk, i, kbuf, vbuf = xs
+            x, _, kv = _apply_attn_block(blk, x, be, cfg, i,
+                                         kv=(kbuf, vbuf), pos=pos)
+            return x, kv
+        x, (knew, vnew) = lax.scan(body, x, (params["blocks"], idxs,
+                                             cache.attn_k, cache.attn_v))
+        cache = LMCache(pos=pos + 1, attn_k=knew, attn_v=vnew)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x, be)[:, 0], cache

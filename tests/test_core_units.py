@@ -1,0 +1,93 @@
+"""Unit tests: templates, VMEM allocator, kernel generator, dispatch."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dispatch, kernelgen, paper_table, templates, vmem
+
+
+def test_contract_all_transpositions():
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(8, 16), jnp.float32)   # (M, K) / (K, M)
+    b = jnp.asarray(rng.randn(16, 8), jnp.float32)
+    want = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(templates.contract(a, b, "NN"), want, rtol=1e-5)
+    np.testing.assert_allclose(templates.contract(a.T, b, "TN"), want, rtol=1e-5)
+    np.testing.assert_allclose(templates.contract(a, b.T, "NT"), want, rtol=1e-5)
+    np.testing.assert_allclose(templates.contract(a.T, b.T, "TT"), want, rtol=1e-5)
+
+
+def test_karatsuba_equals_fcmla():
+    rng = np.random.RandomState(1)
+    ar, ai = (jnp.asarray(rng.randn(4, 8), jnp.float32) for _ in range(2))
+    br, bi = (jnp.asarray(rng.randn(8, 4), jnp.float32) for _ in range(2))
+    p1, p2, p3 = templates.cmul_karatsuba(ar, ai, br, bi, "NN")
+    kr, ki = templates.karatsuba_combine(p1, p2, p3)
+    fr, fi = templates.cmul_fcmla(ar, ai, br, bi, "NN")
+    np.testing.assert_allclose(np.asarray(kr), np.asarray(fr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ki), np.asarray(fi), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.sampled_from([8, 16, 64, 256, 512]),
+       st.sampled_from([128, 256, 512]),
+       st.sampled_from([128, 512, 2048]),
+       st.sampled_from(["float32", "bfloat16"]))
+def test_footprint_monotone_and_positive(bm, bn, bk, dtype):
+    fp = vmem.footprint(bm, bn, bk, dtype)
+    assert fp.total > 0
+    fp2 = vmem.footprint(bm * 2, bn, bk, dtype)
+    assert fp2.total > fp.total
+
+
+def test_vmem_budget_honored_by_table():
+    for sig in kernelgen.full_table():
+        assert sig.footprint().fits, sig
+
+
+def test_table_counts_nonempty_and_tn_reduced():
+    c = kernelgen.census()
+    assert all(v > 0 for v in c.values())
+    # TN families are smaller, mirroring the paper's observation
+    assert c["SGEMM_TN"] < c["SGEMM_NN"]
+
+
+def test_armv8_census_hundreds():
+    assert paper_table.total_kernels() == 786   # 'hundreds of kernels'
+
+
+def test_smallness_criterion_paper_values():
+    with dispatch.configure(paper_thresholds=True):
+        assert dispatch.small_enough(80, 80, 80, "NN")
+        assert not dispatch.small_enough(81, 81, 81, "NN")
+        assert dispatch.small_enough(32, 32, 32, "TN")
+        assert not dispatch.small_enough(33, 33, 33, "TN")
+
+
+def test_align_helpers():
+    assert vmem.align_m(1, jnp.float32) == 8
+    assert vmem.align_m(9, jnp.bfloat16) == 16
+    assert vmem.align_n(1, jnp.float32) == 128
+    assert vmem.align_k(129, jnp.float32) == 256
+
+
+def test_whole_problem_vmem_bound():
+    n32 = vmem.max_whole_problem(jnp.float32)
+    assert 256 <= n32 <= 1024    # sanity: a few hundred fits VMEM
+    assert vmem.max_whole_problem(jnp.float32, complex_=True) < n32
+
+
+def test_build_kernel_cache():
+    sig = kernelgen.kernel_table("S", "NN")[0]
+    k1 = kernelgen.build_kernel(sig, interpret=True)
+    k2 = kernelgen.build_kernel(sig, interpret=True)
+    assert k1 is k2
+
+
+def test_install_subset():
+    n = kernelgen.install(letters=("D",), trans=("TT",), interpret=True,
+                          max_per_family=5)
+    assert n == 5

@@ -1,0 +1,75 @@
+"""Unit + property tests for the run-time stage (input-aware tiling)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost, kernelgen, paper_table, vmem
+from repro.core.tiler import TableView, tile, tile_armv8, tile_tpu
+
+
+def test_paper_fig2_exact():
+    """DP planner reproduces the paper's 72K+450 for 15x15 SGEMM_NN."""
+    t = tile_armv8(15, 15, "S", "NN", "dp")
+    assert t.coeff == paper_table.PAPER_FIG2_IAAT_COEFF == 72
+    assert t.memops(15) == 72 * 15 + 2 * 15 * 15
+
+
+def test_paper_fig2_blocks_match():
+    t = tile_armv8(15, 15, "S", "NN", "dp")
+    sizes = sorted((b.m, b.n) for b in t.blocks)
+    assert sizes == [(3, 2), (3, 13), (12, 3), (12, 6), (12, 6)]
+
+
+def test_greedy_matches_paper_alg2_shape():
+    t = tile_armv8(15, 15, "S", "NN", "greedy")
+    assert t.coeff >= 72          # greedy can't beat DP
+    t.validate_cover()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 96), st.integers(1, 96),
+       st.sampled_from(["S", "D", "C", "Z"]),
+       st.sampled_from(["NN", "NT", "TN", "TT"]))
+def test_armv8_tiling_is_exact_cover(M, N, letter, trans):
+    """Property: every tiling exactly partitions C with table kernels."""
+    t = tile_armv8(M, N, letter, trans, "dp")
+    t.validate_cover()
+    sizes = set(paper_table.kernel_sizes(letter, trans))
+    if trans in paper_table.MIRRORED:
+        sizes = {(n, m) for m, n in sizes}
+    for b in t.blocks:
+        assert (b.m, b.n) in sizes, (b, letter, trans)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_dp_never_worse_than_greedy(M, N):
+    dp = tile_armv8(M, N, "S", "NN", "dp").coeff
+    gr = tile_armv8(M, N, "S", "NN", "greedy").coeff
+    assert dp <= gr
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 700), st.integers(1, 700),
+       st.sampled_from(["S", "C"]), st.sampled_from(["NN", "NT", "TN", "TT"]))
+def test_tpu_tiling_covers_aligned_extent(M, N, letter, trans):
+    t = tile_tpu(M, N, letter, trans, "dp")
+    t.validate_cover()
+    table = kernelgen.kernel_table(letter, trans)
+    dt = table[0].real_dtype
+    assert t.M == vmem.align_m(M, dt)
+    assert t.N == vmem.align_n(N, dt)
+    legal = {(s.bm, s.bn) for s in table}
+    for b in t.blocks:
+        assert (b.m, b.n) in legal
+
+
+def test_memops_objective_value():
+    blocks = [(12, 6), (12, 6), (12, 3), (3, 13), (3, 2)]
+    assert cost.memops_blocks(blocks, 15, 15, 15) == 72 * 15 + 450
+
+
+def test_table_view_widths():
+    tv = TableView.armv8("S", "NN")
+    assert max(tv.widths_for(16)) == 4
+    assert max(tv.widths_for(1)) == 13
+    assert 16 in tv.heights()
