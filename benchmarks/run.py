@@ -1,20 +1,34 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# Exits nonzero when any suite reports an ERROR row (CI regression gate).
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+# runnable as `python benchmarks/run.py` from anywhere: put the repo root
+# (for `benchmarks.*`) and src/ (for `repro.*`, when not pip-installed)
+# on the path ourselves.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:
     from benchmarks import (gemm_sweep, kernel_table, pack_cost, roofline,
-                            tiling_memops)
+                            tiling_memops, tune_report)
     suites = [
         ("tiling_memops", tiling_memops.run),   # paper Fig. 2
         ("pack_cost", pack_cost.run),           # paper Fig. 3
         ("kernel_table", kernel_table.run),     # paper TABLE I
         ("gemm_sweep", gemm_sweep.run),         # paper Figs. 4-7
         ("roofline", roofline.run),             # framework deliverable (g)
+        ("tune_report", tune_report.run),       # empirical vs analytical
     ]
+    if "--quick" in sys.argv[1:]:
+        quick = {"tiling_memops", "kernel_table", "roofline", "tune_report"}
+        suites = [s for s in suites if s[0] in quick]
     rows = []
     for name, fn in suites:
         t0 = time.perf_counter()

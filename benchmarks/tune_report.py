@@ -1,0 +1,45 @@
+"""Tuned vs analytical kernel selection — the empirical-stage deliverable.
+
+Runs the quick cube sweep (S/NN, interpret mode) in memory and reports,
+per size class:
+
+* whether the measured backend choice agrees with the analytical
+  crossover (``TPU_SCALE`` napkin math in DESIGN.md);
+* the speedup of following the *measured* decision over the analytical
+  one, from the sweep's own timings (1.0 when they agree).
+
+In the CPU container interpret-mode pallas timings are pessimistic, so
+disagreements here typically flip toward XLA; on a real TPU the same
+report quantifies what the profile buys at each size.  Nothing below
+touches the persistent cache — the sweep stays in memory.
+"""
+from __future__ import annotations
+
+
+def run(csv_rows) -> None:
+    from repro.core import dispatch
+    from repro.tune import classes as classes_mod, search
+
+    prof = search.sweep(["S"], ["NN"], min_dim=8, max_dim=64,
+                        cube_only=True, top=2, warmup=1, reps=2,
+                        interpret=True, device_kind="bench")
+    agree = 0
+    for key, entry in sorted(prof.entries.items()):
+        sc = classes_mod.SizeClass.from_key(key)
+        M, N, K = classes_mod.representative(sc)
+        analytical = dispatch.decide(
+            M, N, K, sc.letter, sc.trans,
+            dispatch.DispatchConfig(backend="auto")).use_pallas
+        tuned = entry.prefer_pallas
+        agree += analytical == tuned
+        t_an = entry.pallas if analytical else entry.xla
+        t_tu = entry.pallas if tuned else entry.xla
+        tag = key.replace("/", "_")
+        if t_an is None or t_tu is None:
+            csv_rows.append((f"tune_report/{tag}_speedup", 0.0, "n/a"))
+            continue
+        csv_rows.append((f"tune_report/{tag}_speedup",
+                         t_tu.median_us,
+                         round(t_an.median_us / t_tu.median_us, 3)))
+    csv_rows.append(("tune_report/agreement", 0.0,
+                     f"{agree}of{len(prof)}"))

@@ -13,7 +13,8 @@
 
 Config is a contextvar so tests/benchmarks/models can flip backends
 (`xla` for CPU dry-runs, `pallas` with interpret=True for kernel
-validation, `pallas` compiled on real TPUs) without threading arguments.
+validation, `pallas` compiled on real TPUs, `tuned` to route by the
+measured DeviceProfile from ``repro.tune``) without threading arguments.
 """
 from __future__ import annotations
 
@@ -36,7 +37,7 @@ TPU_SCALE = 4.0
 
 @dataclasses.dataclass(frozen=True)
 class DispatchConfig:
-    backend: str = "auto"          # pallas | xla | auto
+    backend: str = "auto"          # pallas | xla | auto | tuned
     interpret: bool = True         # pallas interpret mode (CPU container)
     method: str = "dp"             # tiler: dp (ours) | greedy (paper)
     paper_thresholds: bool = False  # use the ARMv8 80/32 bounds verbatim
@@ -69,6 +70,41 @@ def small_enough(M: int, N: int, K: int, trans: str = "NN",
     """The paper's input-aware criterion: cbrt(MNK) <= threshold."""
     cfg = cfg or config()
     return (M * N * K) ** (1.0 / 3.0) <= cfg.threshold(trans)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """How one GEMM call was routed — inspectable, so tests and the tune
+    report can prove whether a profile (vs the analytical model) decided."""
+    use_pallas: bool
+    source: str                    # "forced" | "profile" | "analytical"
+    sig: Optional["kernelgen.KernelSig"] = None   # tuned kernel override
+
+
+def decide(M: int, N: int, K: int, letter: str, trans: str,
+           cfg: Optional[DispatchConfig] = None) -> Decision:
+    """Route one problem: forced backends first, then the measured
+    DeviceProfile (``tuned`` mode), then the analytical criterion.
+
+    Fallback order (DESIGN.md §Tuning): a ``tuned`` backend with no
+    profile on disk, or with no entry for this size class, degrades to
+    exactly the ``auto`` analytical decision — tuning can only ever
+    refine the dispatch, never strand it."""
+    cfg = cfg or config()
+    if cfg.backend == "pallas":
+        return Decision(True, "forced")
+    if cfg.backend == "xla":
+        return Decision(False, "forced")
+    if cfg.backend == "tuned":
+        from repro.tune import profile as profile_mod
+        prof = profile_mod.active_profile()
+        if prof is not None:
+            entry = prof.lookup_dims(M, N, K, letter, trans)
+            if entry is not None and entry.measured:
+                if entry.prefer_pallas:
+                    return Decision(True, "profile", entry.sig)
+                return Decision(False, "profile")
+    return Decision(small_enough(M, N, K, trans, cfg), "analytical")
 
 
 def _trans_str(trans_a: bool, trans_b: bool) -> str:
@@ -107,11 +143,11 @@ def iaat_gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None,
     trans = _trans_str(trans_a, trans_b)
     M, N, K = _problem_dims(a.shape, b.shape, trans)
     letter = kernelgen.blas_letter(jnp.result_type(a.dtype, b.dtype))
-    use_pallas = cfg.backend == "pallas" or (
-        cfg.backend == "auto" and small_enough(M, N, K, trans, cfg))
-    if not use_pallas or cfg.backend == "xla":
+    d = decide(M, N, K, letter, trans, cfg)
+    if not d.use_pallas:
         return _xla_gemm(a, b, c, alpha, beta, trans)
-    p = plan_mod.build_plan(M, N, K, letter, trans, cfg.method)
+    p = plan_mod.build_plan(M, N, K, letter, trans, cfg.method,
+                            override=d.sig)
     if p.num_kernel_calls > cfg.max_plan_regions:
         return _xla_gemm(a, b, c, alpha, beta, trans)
     return plan_mod.execute(p, a, b, c, alpha, beta,

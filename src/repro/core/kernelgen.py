@@ -165,11 +165,19 @@ def build_kernel(sig: KernelSig, *, has_c_in: bool = False,
 def install(letters: Sequence[str] = ("S", "D", "C", "Z"),
             trans: Sequence[str] = TRANSPOSITIONS,
             *, interpret: bool = False,
-            max_per_family: Optional[int] = None) -> int:
+            max_per_family: Optional[int] = None,
+            tune: bool = False,
+            tune_kwargs: Optional[dict] = None) -> int:
     """Eagerly build the kernel table (the install-time stage proper).
 
     Returns the number of kernels built.  ``max_per_family`` trims each
-    (dtype, trans) family for quick installs in tests.
+    (dtype, trans) family for quick installs in tests.  With ``tune=True``
+    the build is followed by the empirical sweep (repro.tune): measured
+    winners are merged into the persistent DeviceProfile and activated,
+    so a subsequent ``configure(backend="tuned")`` dispatch uses them —
+    this is the full install-time stage the paper describes, generation
+    plus selection.  ``tune_kwargs`` forwards to ``repro.tune.search.sweep``
+    (defaults are the quick cube sweep so tests stay fast).
     """
     n = 0
     for letter in letters:
@@ -180,6 +188,19 @@ def install(letters: Sequence[str] = ("S", "D", "C", "Z"),
             for sig in fam:
                 build_kernel(sig, interpret=interpret)
                 n += 1
+    if tune:
+        from repro.tune import profile as profile_mod, search
+        kw = dict(cube_only=True, max_dim=128, top=2, reps=3,
+                  interpret=interpret)
+        kw.update(tune_kwargs or {})
+        prof = search.sweep(letters, trans, **kw)
+        path = profile_mod.default_profile_path(mode=prof.mode)
+        try:
+            prof = profile_mod.DeviceProfile.load(path).merge(prof)
+        except (OSError, ValueError, KeyError):
+            pass        # absent or unusable existing profile: overwrite
+        prof.save(path)
+        profile_mod.set_active_profile(prof)
     return n
 
 

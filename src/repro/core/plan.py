@@ -23,7 +23,7 @@ from jax import lax
 
 from repro.core import kernelgen, vmem
 from repro.core.kernelgen import KernelSig
-from repro.core.tiler import Tiling, tile_tpu
+from repro.core.tiler import Block, Tiling, tile_tpu
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,9 +77,37 @@ def _choose_bk(letter: str, trans: str, bm: int, bn: int, K: int) -> int:
     return cands[-1]
 
 
+def _override_plan(M: int, N: int, K: int, letter: str, trans: str,
+                   sig: KernelSig) -> Plan:
+    """Single-region plan pinned to a tuned kernel signature.
+
+    The empirical tuner (repro.tune) measures whole-problem kernels, so a
+    profile override is one ceil-div grid of ``sig`` blocks covering C;
+    M/N overhang is resolved by the kernels' masking exactly as in tiled
+    plans."""
+    if sig.letter != letter or sig.trans != trans:
+        raise ValueError(f"override {sig.name} does not match "
+                         f"{letter}/{trans}")
+    gm = -(M // -sig.bm)
+    gn = -(N // -sig.bn)
+    blocks = []
+    for i in range(gm):
+        m0 = i * sig.bm
+        for j in range(gn):
+            n0 = j * sig.bn
+            blocks.append(Block(m0, n0, min(sig.bm, M - m0),
+                                min(sig.bn, N - n0)))
+    tiling = Tiling(M, N, tuple(blocks), "tuned")
+    return Plan(M, N, K, letter, trans,
+                (Region(sig, 0, 0, gm, gn),), tiling)
+
+
 @functools.lru_cache(maxsize=4096)
 def build_plan(M: int, N: int, K: int, letter: str, trans: str,
-               method: str = "dp") -> Plan:
+               method: str = "dp",
+               override: Optional[KernelSig] = None) -> Plan:
+    if override is not None:
+        return _override_plan(M, N, K, letter, trans, override)
     tiling = tile_tpu(M, N, letter, trans, method)
     # fuse: per stripe, merge equal-width runs; then merge vertically
     # adjacent stripes with identical runs.

@@ -62,8 +62,10 @@ class Checkpointer:
              async_: bool = False) -> None:
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                   state)
+        # Always drain the previous async writer first: a sync save racing
+        # an in-flight async save of the same step collides on the .tmp dir.
+        self.wait()
         if async_:
-            self.wait()
             self._thread = threading.Thread(
                 target=self._write, args=(step, host_state, extra or {}),
                 daemon=True)

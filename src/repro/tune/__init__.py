@@ -1,0 +1,27 @@
+"""repro.tune — the empirical install-time stage.
+
+The analytical pipeline (cost.py prior, TPU_SCALE crossover, _choose_bk)
+predicts; this package *measures*.  It buckets the continuous
+(M, N, K, dtype, trans) input space into geometric size classes
+(classes.py), micro-benchmarks the analytically-promising kernel
+candidates plus the XLA baseline per class (timer.py + search.py), and
+persists the winners as a versioned per-device :class:`DeviceProfile`
+(profile.py) that ``dispatch.configure(backend="tuned")`` consults at
+call time, falling back to the analytical model for unmeasured classes.
+
+``python -m repro.tune`` runs the sweep and writes the profile.
+"""
+from repro.tune.classes import SizeClass, size_class, representative
+from repro.tune.profile import (DeviceProfile, ProfileEntry, active_profile,
+                                clear_active_profile, default_profile_path,
+                                set_active_profile)
+from repro.tune.search import sweep, tune_class
+from repro.tune.timer import Measurement, measure
+
+__all__ = [
+    "SizeClass", "size_class", "representative",
+    "DeviceProfile", "ProfileEntry", "active_profile",
+    "clear_active_profile", "default_profile_path", "set_active_profile",
+    "sweep", "tune_class",
+    "Measurement", "measure",
+]

@@ -1,0 +1,239 @@
+"""Persistent per-device tuning profiles.
+
+A :class:`DeviceProfile` is the durable artefact of the empirical
+install-time stage: for each measured :class:`SizeClass` it stores the
+best pallas kernel signature and the measured pallas/XLA times, from
+which dispatch derives both decisions the analytical model used to
+guess — *which backend* (the crossover) and *which kernel* (the
+per-class override).
+
+Storage is versioned JSON keyed by device kind under an env-var cache
+dir (``REPRO_TUNE_CACHE``, default ``~/.cache/repro/tune``), so a
+profile tuned once on a v5e pod survives process restarts and is never
+misapplied to a different accelerator.  ``merge`` unions two profiles
+entry-wise, keeping the better-measured pallas time per class, so
+incremental sweeps (one letter today, another tomorrow) compose.
+
+The *active* profile is process-global state consulted by
+``dispatch.configure(backend="tuned")``; it is lazily loaded from disk
+on first tuned-mode dispatch and can be pinned/cleared explicitly by
+tests and the CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import threading
+from typing import Dict, Optional
+
+from repro.core.kernelgen import KernelSig
+from repro.tune.classes import SizeClass, size_class
+from repro.tune.timer import Measurement
+
+PROFILE_VERSION = 1
+CACHE_ENV = "REPRO_TUNE_CACHE"
+_DEFAULT_CACHE = "~/.cache/repro/tune"
+
+
+def _sig_to_json(sig: KernelSig) -> dict:
+    return {"letter": sig.letter, "trans": sig.trans,
+            "bm": sig.bm, "bn": sig.bn, "bk": sig.bk}
+
+
+def _sig_from_json(d: dict) -> KernelSig:
+    return KernelSig(d["letter"], d["trans"], int(d["bm"]), int(d["bn"]),
+                     int(d["bk"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileEntry:
+    """Measured outcome for one size class."""
+    sig: Optional[KernelSig]          # best pallas kernel (None: none ran)
+    pallas: Optional[Measurement]
+    xla: Optional[Measurement]
+
+    @property
+    def measured(self) -> bool:
+        """At least one side actually timed — an all-failed entry carries
+        no information and must not override the analytical fallback."""
+        return self.pallas is not None or self.xla is not None
+
+    @property
+    def prefer_pallas(self) -> bool:
+        """The measured crossover: pallas wins this class."""
+        if self.sig is None or self.pallas is None:
+            return False
+        if self.xla is None:
+            return True
+        return self.pallas.median_us <= self.xla.median_us
+
+    def to_json(self) -> dict:
+        return {
+            "sig": _sig_to_json(self.sig) if self.sig else None,
+            "pallas": self.pallas.to_json() if self.pallas else None,
+            "xla": self.xla.to_json() if self.xla else None,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ProfileEntry":
+        return cls(
+            _sig_from_json(d["sig"]) if d.get("sig") else None,
+            Measurement.from_json(d["pallas"]) if d.get("pallas") else None,
+            Measurement.from_json(d["xla"]) if d.get("xla") else None,
+        )
+
+    def better_than(self, other: "ProfileEntry") -> bool:
+        """Merge preference: the entry with the faster measured winner."""
+        def best(e: "ProfileEntry") -> float:
+            ts = [m.median_us for m in (e.pallas, e.xla) if m is not None]
+            return min(ts) if ts else float("inf")
+        return best(self) < best(other)
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    device_kind: str
+    entries: Dict[str, ProfileEntry] = dataclasses.field(default_factory=dict)
+    version: int = PROFILE_VERSION
+    # interpret-mode timings are orders of magnitude off compiled ones, so
+    # the two never share a file: one profile per (device, mode), and
+    # loading prefers compiled (authoritative) over interpret (CI smoke).
+    mode: str = "interpret"          # "interpret" | "compiled"
+
+    # -- lookup ------------------------------------------------------------
+
+    def lookup(self, sc: SizeClass) -> Optional[ProfileEntry]:
+        return self.entries.get(sc.key)
+
+    def lookup_dims(self, M: int, N: int, K: int, letter: str,
+                    trans: str) -> Optional[ProfileEntry]:
+        return self.lookup(size_class(M, N, K, letter, trans))
+
+    def record(self, sc: SizeClass, entry: ProfileEntry) -> None:
+        self.entries[sc.key] = entry
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # -- persistence -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"version": self.version, "device_kind": self.device_kind,
+                "mode": self.mode,
+                "entries": {k: e.to_json() for k, e in
+                            sorted(self.entries.items())}}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "DeviceProfile":
+        ver = int(d.get("version", -1))
+        if ver != PROFILE_VERSION:
+            raise ValueError(
+                f"profile version {ver} != supported {PROFILE_VERSION}; "
+                "re-run `python -m repro.tune`")
+        return cls(d["device_kind"],
+                   {k: ProfileEntry.from_json(e)
+                    for k, e in d.get("entries", {}).items()},
+                   ver, d.get("mode", "interpret"))
+
+    def save(self, path: Optional[os.PathLike] = None) -> pathlib.Path:
+        p = pathlib.Path(path) if path else default_profile_path(
+            self.device_kind, self.mode)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(p.suffix + ".tmp")
+        tmp.write_text(json.dumps(self.to_json(), indent=1, sort_keys=True))
+        tmp.replace(p)      # atomic: concurrent readers never see a torn file
+        return p
+
+    @classmethod
+    def load(cls, path: os.PathLike) -> "DeviceProfile":
+        return cls.from_json(json.loads(pathlib.Path(path).read_text()))
+
+    def merge(self, other: "DeviceProfile") -> "DeviceProfile":
+        """Entry-wise union; on conflict keep the better-measured entry."""
+        if other.device_kind != self.device_kind:
+            raise ValueError(f"cannot merge profiles for different devices: "
+                             f"{self.device_kind!r} vs {other.device_kind!r}")
+        if other.mode != self.mode:
+            raise ValueError(f"cannot merge {other.mode!r} timings into a "
+                             f"{self.mode!r} profile — not comparable")
+        merged = dict(self.entries)
+        for k, e in other.entries.items():
+            if k not in merged or e.better_than(merged[k]):
+                merged[k] = e
+        return DeviceProfile(self.device_kind, merged, self.version,
+                             self.mode)
+
+
+# --------------------------------------------------------------------------
+# Cache-dir layout.
+# --------------------------------------------------------------------------
+
+def cache_dir() -> pathlib.Path:
+    return pathlib.Path(os.environ.get(CACHE_ENV, "")
+                        or _DEFAULT_CACHE).expanduser()
+
+
+def _sanitize(kind: str) -> str:
+    return "".join(c if c.isalnum() or c in "-_." else "_"
+                   for c in kind.strip()) or "unknown"
+
+
+def current_device_kind() -> str:
+    import jax
+    return _sanitize(jax.devices()[0].device_kind)
+
+
+def default_profile_path(device_kind: Optional[str] = None,
+                         mode: str = "interpret") -> pathlib.Path:
+    kind = _sanitize(device_kind) if device_kind else current_device_kind()
+    return cache_dir() / f"profile_v{PROFILE_VERSION}_{kind}_{mode}.json"
+
+
+def find_default_profile() -> Optional[pathlib.Path]:
+    """The profile file tuned dispatch would load: compiled timings are
+    authoritative when present; an interpret profile (CI smoke) only
+    applies when no compiled one exists."""
+    for mode in ("compiled", "interpret"):
+        p = default_profile_path(mode=mode)
+        if p.exists():
+            return p
+    return None
+
+
+# --------------------------------------------------------------------------
+# The active profile (what tuned-mode dispatch reads).
+# --------------------------------------------------------------------------
+
+_UNSET = object()
+_active = _UNSET                  # _UNSET: not yet loaded; None: known-absent
+_active_lock = threading.Lock()
+
+
+def set_active_profile(p: Optional[DeviceProfile]) -> None:
+    global _active
+    with _active_lock:
+        _active = p
+
+
+def clear_active_profile() -> None:
+    """Forget the active profile AND the load attempt (next tuned dispatch
+    re-reads disk — call after changing REPRO_TUNE_CACHE or re-tuning)."""
+    global _active
+    with _active_lock:
+        _active = _UNSET
+
+
+def active_profile() -> Optional[DeviceProfile]:
+    """The profile tuned dispatch consults; lazily loaded from the default
+    path on first call, None (analytical fallback) if absent/corrupt."""
+    global _active
+    with _active_lock:
+        if _active is _UNSET:
+            path = find_default_profile()
+            try:
+                _active = DeviceProfile.load(path) if path else None
+            except (OSError, ValueError, KeyError, json.JSONDecodeError):
+                _active = None
+        return _active

@@ -1,0 +1,132 @@
+"""Candidate search: analytical prior first, stopwatch second.
+
+Per size class the search (a) enumerates every legal kernel from the
+install-time table, (b) ranks them with the roofline prior — padded-grid
+FLOPs vs streamed HBM traffic, the same physics as ``cost.py`` — and
+(c) micro-benchmarks only the ``top`` ranked candidates plus the XLA
+baseline.  The prior never *decides*, it only prunes: tritonBLAS uses
+its analytical model the same way, as a prior that measurements refine,
+which keeps sweep cost O(top) per class instead of O(|table|) while the
+final word stays empirical.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost, kernelgen
+from repro.core.kernelgen import KernelSig
+from repro.tune import classes as classes_mod
+from repro.tune.classes import SizeClass
+from repro.tune.profile import DeviceProfile, ProfileEntry, current_device_kind
+from repro.tune.timer import Measurement, try_measure
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(a // -b)
+
+
+def prior_us(sig: KernelSig, M: int, N: int, K: int) -> float:
+    """Roofline estimate (µs) of running the whole problem on one kernel.
+
+    Compute counts the *padded* grid (an oversized block wastes MXU work on
+    masked lanes); traffic counts actual per-grid-step panel streaming plus
+    the C write-out.  Absolute scale is napkin math; only the ordering is
+    consumed, and only as a pruning prior.
+    """
+    gm, gn, nk = _cdiv(M, sig.bm), _cdiv(N, sig.bn), _cdiv(K, sig.bk)
+    item = jnp.dtype(sig.real_dtype).itemsize
+    planes = 2 if sig.complex_ else 1
+    mults = 3 if sig.complex_ else 1      # karatsuba
+    flops = 2.0 * (gm * sig.bm) * (gn * sig.bn) * (nk * sig.bk) * mults
+    traffic = (gm * gn * nk * (sig.bm * sig.bk + sig.bk * sig.bn)
+               + 2.0 * M * N) * item * planes
+    peak = cost.PEAK_FLOPS_F32 / (2 if sig.letter in ("D", "Z") else 1)
+    return max(flops / peak, traffic / cost.HBM_BW) * 1e6
+
+
+def candidates(letter: str, trans: str, M: int, N: int, K: int,
+               top: int = 4) -> List[KernelSig]:
+    """The ``top`` analytically-promising kernels for this problem."""
+    table = kernelgen.kernel_table(letter, trans)
+    ranked = sorted(table, key=lambda s: (prior_us(s, M, N, K), s))
+    return list(ranked[:max(1, top)])
+
+
+# --------------------------------------------------------------------------
+# Benchmark one size class.
+# --------------------------------------------------------------------------
+
+def _operands(sc: SizeClass, M: int, N: int, K: int):
+    rng = np.random.RandomState(0x1AA7)
+    dt = {**kernelgen.BLAS_DTYPES, **kernelgen.FRAMEWORK_DTYPES}[sc.letter]
+    a_shape = (M, K) if sc.trans[0] == "N" else (K, M)
+    b_shape = (K, N) if sc.trans[1] == "N" else (N, K)
+
+    def mk(shape):
+        x = rng.randn(*shape)
+        if kernelgen.IS_COMPLEX.get(sc.letter, False):
+            x = x + 1j * rng.randn(*shape)
+        return jnp.asarray(x, dt)
+
+    return mk(a_shape), mk(b_shape)
+
+
+def _xla_fn(trans: str, a, b) -> Callable[[], jax.Array]:
+    @jax.jit
+    def f(a, b):
+        opa = a.T if trans[0] == "T" else a
+        opb = b.T if trans[1] == "T" else b
+        return jnp.dot(opa, opb)
+    return lambda: f(a, b)
+
+
+def _pallas_fn(sig: KernelSig, a, b, interpret: bool) -> Callable[[], jax.Array]:
+    from repro.kernels import iaat_gemm
+
+    @jax.jit
+    def f(a, b):
+        return iaat_gemm.gemm_region(sig, a, b, None, alpha=1.0, beta=0.0,
+                                     interpret=interpret)
+    return lambda: f(a, b)
+
+
+def tune_class(sc: SizeClass, *, top: int = 4, warmup: int = 1,
+               reps: int = 5, interpret: bool = True) -> ProfileEntry:
+    """Measure one size class at its representative shape; returns the
+    entry (best pallas sig + both timings) to record in the profile."""
+    M, N, K = classes_mod.representative(sc)
+    a, b = _operands(sc, M, N, K)
+    xla = try_measure(_xla_fn(sc.trans, a, b), warmup=warmup, reps=reps)
+    best_sig: Optional[KernelSig] = None
+    best: Optional[Measurement] = None
+    for sig in candidates(sc.letter, sc.trans, M, N, K, top=top):
+        m = try_measure(_pallas_fn(sig, a, b, interpret),
+                        warmup=warmup, reps=reps)
+        if m is not None and (best is None or m.median_us < best.median_us):
+            best_sig, best = sig, m
+    return ProfileEntry(best_sig, best, xla)
+
+
+def sweep(letters: Sequence[str] = ("S",),
+          trans: Sequence[str] = ("NN",), *,
+          min_dim: int = 8, max_dim: int = 512, cube_only: bool = False,
+          top: int = 4, warmup: int = 1, reps: int = 5,
+          interpret: bool = True, device_kind: Optional[str] = None,
+          progress: Optional[Callable[[SizeClass, ProfileEntry], None]] = None,
+          ) -> DeviceProfile:
+    """Run the tuning sweep and return the (unsaved) DeviceProfile."""
+    prof = DeviceProfile(device_kind or current_device_kind(),
+                         mode="interpret" if interpret else "compiled")
+    for sc in classes_mod.classes_up_to(letters, trans, max_dim,
+                                        min_dim=min_dim,
+                                        cube_only=cube_only):
+        entry = tune_class(sc, top=top, warmup=warmup, reps=reps,
+                           interpret=interpret)
+        prof.record(sc, entry)
+        if progress is not None:
+            progress(sc, entry)
+    return prof

@@ -1,0 +1,73 @@
+"""Micro-benchmark harness for the empirical tuner.
+
+Robustness over cleverness: dispatch overhead and the first-call compile
+are excluded by ``warmup`` calls, async dispatch is closed out with
+``jax.block_until_ready`` on the full result tree, and the reported
+statistic is the *median* of k repeats (immune to one GC pause or
+preemption, unlike mean; less optimistic than min when the device is
+shared).  In the CPU container kernels run under Pallas interpret mode —
+absolute numbers are meaningless there but the harness still produces a
+total order, which is all the tuner needs, and ``Measurement.reliable``
+flags how trustworthy that order is (spread of the repeats).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    median_us: float
+    best_us: float
+    worst_us: float
+    reps: int
+
+    @property
+    def reliable(self) -> bool:
+        """Repeats agree to within 4x — enough to trust a ranking."""
+        return self.worst_us <= 4 * self.best_us
+
+    def to_json(self) -> dict:
+        return {"median_us": self.median_us, "best_us": self.best_us,
+                "worst_us": self.worst_us, "reps": self.reps}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Measurement":
+        return cls(float(d["median_us"]), float(d["best_us"]),
+                   float(d["worst_us"]), int(d["reps"]))
+
+
+def _median(xs) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def measure(fn: Callable[[], Any], *, warmup: int = 1,
+            reps: int = 5) -> Measurement:
+    """Time ``fn()`` (which must return a jax array / pytree): median-of-k
+    wall microseconds after ``warmup`` discarded calls."""
+    if reps < 1:
+        raise ValueError("reps must be >= 1")
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e6)
+    return Measurement(_median(times), min(times), max(times), reps)
+
+
+def try_measure(fn: Callable[[], Any], *, warmup: int = 1,
+                reps: int = 5) -> Optional[Measurement]:
+    """``measure`` but a failing candidate (lowering error, OOM, interpret
+    limitation) yields None instead of aborting the whole sweep."""
+    try:
+        return measure(fn, warmup=warmup, reps=reps)
+    except Exception:  # noqa: BLE001 — any candidate failure disqualifies it
+        return None

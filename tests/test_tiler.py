@@ -1,5 +1,6 @@
 """Unit + property tests for the run-time stage (input-aware tiling)."""
 import pytest
+pytest.importorskip("hypothesis")  # property tests degrade to skip
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cost, kernelgen, paper_table, vmem

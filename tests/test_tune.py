@@ -1,0 +1,277 @@
+"""repro.tune: bucketing, profile persistence, tuned-mode dispatch."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch, plan as plan_mod
+from repro.core.kernelgen import KernelSig
+from repro.tune import classes, profile as profile_mod, search
+from repro.tune.classes import SizeClass
+from repro.tune.profile import DeviceProfile, ProfileEntry
+from repro.tune.timer import Measurement, measure
+
+
+@pytest.fixture(autouse=True)
+def _isolated_profile_state(tmp_path, monkeypatch):
+    """Each test gets an empty cache dir and no active profile."""
+    monkeypatch.setenv(profile_mod.CACHE_ENV, str(tmp_path / "cache"))
+    profile_mod.clear_active_profile()
+    yield
+    profile_mod.clear_active_profile()
+
+
+# -- size classes ----------------------------------------------------------
+
+def test_bucket_boundaries_exact():
+    # powers of GROWTH=2 open a new bucket exactly at the power
+    for i in range(1, 12):
+        lo, hi = classes.bucket_bounds(i)
+        assert lo == 2 ** i
+        assert classes.bucket_index(2 ** i) == i
+        assert classes.bucket_index(2 ** i - 1) == i - 1
+        assert classes.bucket_index(2 ** (i + 1) - 1) == i
+        assert lo <= classes.bucket_representative(i) < hi
+
+
+def test_bucketing_deterministic_and_total():
+    for x in list(range(1, 300)) + [1023, 1024, 1 << 20]:
+        i = classes.bucket_index(x)
+        lo, hi = classes.bucket_bounds(i)
+        assert lo <= x < hi
+        assert classes.bucket_index(x) == i   # idempotent / deterministic
+
+
+def test_size_class_key_roundtrip():
+    sc = classes.size_class(45, 129, 7, "S", "NT")
+    assert SizeClass.from_key(sc.key) == sc
+    M, N, K = classes.representative(sc)
+    assert classes.size_class(M, N, K, "S", "NT") == sc
+
+
+def test_bucket_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        classes.bucket_index(0)
+
+
+def test_classes_up_to_cube_diagonal():
+    cs = classes.classes_up_to(["S"], ["NN"], 128, min_dim=8,
+                               cube_only=True)
+    # buckets whose representative (11, 23, 45, 91) lands in [8, 128]
+    assert len(cs) == 4
+    assert all(sc.mb == sc.nb == sc.kb for sc in cs)
+    for sc in cs:
+        assert all(8 <= d <= 128 for d in classes.representative(sc))
+    full = classes.classes_up_to(["S"], ["NN"], 128, min_dim=8)
+    assert len(full) == 4 ** 3
+
+
+# -- profile persistence ---------------------------------------------------
+
+def _entry(pallas_us, xla_us, sig=KernelSig("S", "NN", 64, 128, 128)):
+    m = lambda us: Measurement(us, us * 0.9, us * 1.1, 3)  # noqa: E731
+    return ProfileEntry(sig, m(pallas_us), m(xla_us))
+
+
+def test_profile_save_load_roundtrip(tmp_path):
+    prof = DeviceProfile("cpu")
+    sc = classes.size_class(45, 45, 45, "S", "NN")
+    prof.record(sc, _entry(10.0, 20.0))
+    path = prof.save(tmp_path / "p.json")
+    back = DeviceProfile.load(path)
+    assert back.to_json() == prof.to_json()
+    e = back.lookup(sc)
+    assert e.prefer_pallas
+    assert e.sig == KernelSig("S", "NN", 64, 128, 128)
+    assert e.pallas.median_us == 10.0
+
+
+def test_profile_default_path_uses_env_cache(tmp_path):
+    p = profile_mod.default_profile_path("cpu")
+    assert str(p).startswith(str(tmp_path / "cache"))
+    assert "cpu" in p.name
+
+
+def test_profile_version_gate(tmp_path):
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps({"version": 0, "device_kind": "cpu",
+                                "entries": {}}))
+    with pytest.raises(ValueError):
+        DeviceProfile.load(path)
+
+
+def test_profile_merge_keeps_better_entry():
+    sc1 = classes.size_class(45, 45, 45, "S", "NN")
+    sc2 = classes.size_class(90, 90, 90, "S", "NN")
+    a = DeviceProfile("cpu")
+    a.record(sc1, _entry(10.0, 20.0))
+    b = DeviceProfile("cpu")
+    b.record(sc1, _entry(5.0, 20.0))      # faster winner: should replace
+    b.record(sc2, _entry(30.0, 8.0))      # new class: should union in
+    merged = a.merge(b)
+    assert len(merged) == 2
+    assert merged.lookup(sc1).pallas.median_us == 5.0
+    assert not merged.lookup(sc2).prefer_pallas
+
+
+def test_profile_merge_rejects_device_mismatch():
+    with pytest.raises(ValueError):
+        DeviceProfile("cpu").merge(DeviceProfile("TPU_v5e"))
+
+
+def test_profile_merge_rejects_mode_mismatch():
+    with pytest.raises(ValueError):
+        DeviceProfile("cpu", mode="interpret").merge(
+            DeviceProfile("cpu", mode="compiled"))
+
+
+def test_compiled_profile_preferred_over_interpret():
+    sc = classes.size_class(45, 45, 45, "S", "NN")
+    interp = DeviceProfile(profile_mod.current_device_kind(),
+                           mode="interpret")
+    interp.record(sc, _entry(100.0, 1.0))     # interpret says xla
+    interp.save()
+    compiled = DeviceProfile(profile_mod.current_device_kind(),
+                             mode="compiled")
+    compiled.record(sc, _entry(1.0, 100.0))   # compiled says pallas
+    compiled.save()
+    assert interp.save() != compiled.save()   # distinct per-mode files
+    profile_mod.clear_active_profile()
+    active = profile_mod.active_profile()
+    assert active.mode == "compiled"
+    assert active.lookup(sc).prefer_pallas
+
+
+def test_unmeasured_entry_falls_back_analytical():
+    sc = classes.size_class(45, 45, 45, "S", "NN")
+    prof = DeviceProfile(profile_mod.current_device_kind())
+    prof.record(sc, ProfileEntry(None, None, None))   # sweep all-failed
+    profile_mod.set_active_profile(prof)
+    d = dispatch.decide(45, 45, 45, "S", "NN",
+                        dispatch.DispatchConfig(backend="tuned"))
+    assert d.source == "analytical"
+
+
+# -- timer -----------------------------------------------------------------
+
+def test_measure_median_of_k():
+    m = measure(lambda: jnp.zeros((4, 4)), warmup=1, reps=3)
+    assert m.reps == 3
+    assert 0 < m.best_us <= m.median_us <= m.worst_us
+
+
+# -- tuned-mode dispatch ---------------------------------------------------
+
+def _gemm_operands(M, N, K, seed=0):
+    rng = np.random.RandomState(seed)
+    return (jnp.asarray(rng.randn(M, K), jnp.float32),
+            jnp.asarray(rng.randn(K, N), jnp.float32))
+
+
+def test_tuned_mode_falls_back_analytical_without_profile():
+    assert profile_mod.active_profile() is None
+    cfg = dispatch.DispatchConfig(backend="tuned")
+    d = dispatch.decide(10, 10, 10, "S", "NN", cfg)
+    assert d.source == "analytical"
+    auto = dispatch.decide(10, 10, 10, "S", "NN",
+                           dispatch.DispatchConfig(backend="auto"))
+    assert d.use_pallas == auto.use_pallas
+    a, b = _gemm_operands(10, 10, 10)
+    with dispatch.configure(backend="tuned"):
+        out = dispatch.iaat_gemm(a, b)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(a) @ np.asarray(b), rtol=2e-5)
+
+
+def test_tuned_mode_reads_profile():
+    """The acceptance check: a profile on disk provably changes routing."""
+    M = N = K = 45
+    sc = classes.size_class(M, N, K, "S", "NN")
+    # analytical auto-mode would choose pallas for this small problem...
+    assert dispatch.decide(M, N, K, "S", "NN",
+                           dispatch.DispatchConfig(backend="auto")).use_pallas
+    # ...but the measured profile says XLA wins this class.
+    prof = DeviceProfile(profile_mod.current_device_kind())
+    prof.record(sc, _entry(100.0, 1.0))
+    prof.save()                            # default (env-cache) path
+    profile_mod.clear_active_profile()     # force the lazy disk load
+    cfg = dispatch.DispatchConfig(backend="tuned")
+    d = dispatch.decide(M, N, K, "S", "NN", cfg)
+    assert d.source == "profile"
+    assert not d.use_pallas
+    a, b = _gemm_operands(M, N, K)
+    with dispatch.configure(backend="tuned"):
+        out = dispatch.iaat_gemm(a, b)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(a) @ np.asarray(b), rtol=2e-5)
+
+
+def test_tuned_mode_kernel_override_used():
+    M = N = K = 45
+    sc = classes.size_class(M, N, K, "S", "NN")
+    sig = KernelSig("S", "NN", 32, 128, 256)
+    prof = DeviceProfile(profile_mod.current_device_kind())
+    prof.record(sc, _entry(1.0, 100.0, sig=sig))
+    profile_mod.set_active_profile(prof)
+    cfg = dispatch.DispatchConfig(backend="tuned")
+    d = dispatch.decide(M, N, K, "S", "NN", cfg)
+    assert d.source == "profile" and d.use_pallas and d.sig == sig
+    p = plan_mod.build_plan(M, N, K, "S", "NN", cfg.method, override=d.sig)
+    assert p.num_kernel_calls == 1
+    assert p.regions[0].sig == sig
+    p.tiling.validate_cover()
+    a, b = _gemm_operands(M, N, K)
+    with dispatch.configure(backend="tuned"):
+        out = dispatch.iaat_gemm(a, b)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(a) @ np.asarray(b),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_analytical_paths_unchanged_by_profile():
+    """auto/pallas/xla backends never consult the profile."""
+    prof = DeviceProfile(profile_mod.current_device_kind())
+    sc = classes.size_class(10, 10, 10, "S", "NN")
+    prof.record(sc, _entry(100.0, 1.0))    # profile says xla
+    profile_mod.set_active_profile(prof)
+    assert dispatch.decide(10, 10, 10, "S", "NN",
+                           dispatch.DispatchConfig(backend="auto")).use_pallas
+    assert dispatch.decide(
+        10, 10, 10, "S", "NN",
+        dispatch.DispatchConfig(backend="pallas")).source == "forced"
+
+
+def test_install_tune_writes_and_activates_profile():
+    from repro.core import kernelgen
+    n = kernelgen.install(["S"], ["NN"], interpret=True, max_per_family=1,
+                          tune=True,
+                          tune_kwargs=dict(min_dim=8, max_dim=16, reps=1,
+                                           top=1))
+    assert n == 1
+    assert profile_mod.default_profile_path().exists()
+    prof = profile_mod.active_profile()
+    assert prof is not None and len(prof) == 1
+
+
+# -- sweep + CLI -----------------------------------------------------------
+
+def test_sweep_single_class_and_cli(tmp_path, capsys):
+    prof = search.sweep(["S"], ["NN"], min_dim=8, max_dim=16,
+                        cube_only=True, top=1, reps=1, interpret=True)
+    assert len(prof) == 1
+    (entry,) = prof.entries.values()
+    assert entry.xla is not None or entry.pallas is not None
+
+    from repro.tune.__main__ import main
+    out = tmp_path / "cli.json"
+    rc = main(["--letters", "S", "--trans", "NN", "--quick",
+               "--min-dim", "8", "--max-dim", "16", "--reps", "1",
+               "--out", str(out)])
+    assert rc == 0
+    assert out.exists()
+    written = DeviceProfile.load(out)
+    assert len(written) == 1
+    rc = main(["--show", "--out", str(out)])
+    assert rc == 0
+    assert "entries" in capsys.readouterr().out
