@@ -1,33 +1,32 @@
 """MoE expert compute through IAAT batched small GEMMs — the paper's
 "small GEMM in machine learning" scenario, at framework scale.
 
-Shows: capacity routing, the (E, C, d) grouped layout, the Pallas
-batched-gemm kernel vs the XLA einsum path, and the decode-time regime
-where per-expert token counts are tiny (exactly the paper's target).
+Shows: capacity routing, the (E, C, d) grouped layout, the unified
+Policy + Router picking the grouped kernel and its blocks (the same
+input-aware decision layer the 2-D path uses, profile-refined under
+``backend="tuned"``), and the decode-time regime where per-expert token
+counts are tiny (exactly the paper's target).
 
     PYTHONPATH=src python examples/moe_iaat.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import configs
-from repro.core import dispatch
-from repro.kernels import ops
+from repro import api, configs
 from repro.models import layers as L
-from repro.models.common import XLA, Backend
 
 cfg = configs.get_smoke("moonshot-v1-16b-a3b")
 m = cfg.moe
 key = jax.random.PRNGKey(0)
 p = L.init_moe(key, cfg, jnp.float32)
 
+XLA = api.named_policy("xla")
+PALLAS = api.named_policy("pallas")
+
 # --- prefill regime: many tokens per expert --------------------------------
 x = jax.random.normal(key, (4, 64, cfg.d_model), jnp.float32) * 0.3
 y_xla, aux = L.moe(p, x, XLA, cfg)
-y_pl, _ = L.moe(p, x, Backend("pallas", interpret=True), cfg)
+y_pl, _ = L.moe(p, x, PALLAS, cfg)
 print(f"prefill: {x.shape[0] * x.shape[1]} tokens over {m.num_experts} "
       f"experts top-{m.top_k}; pallas-vs-xla maxerr "
       f"{float(jnp.abs(y_xla - y_pl).max()):.2e}, aux={float(aux):.4f}")
@@ -35,22 +34,31 @@ print(f"prefill: {x.shape[0] * x.shape[1]} tokens over {m.num_experts} "
 # --- decode regime: the paper's small-GEMM case ----------------------------
 xd = jax.random.normal(key, (8, 1, cfg.d_model), jnp.float32) * 0.3
 yd_xla, _ = L.moe(p, xd, XLA, cfg)
-yd_pl, _ = L.moe(p, xd, Backend("pallas", interpret=True), cfg)
+yd_pl, _ = L.moe(p, xd, PALLAS, cfg)
 print(f"decode: 8 tokens -> per-expert GEMMs of ~"
       f"{8 * m.top_k // m.num_experts + 1} rows (cbrt(MNK)~"
       f"{(3 * cfg.d_model * m.d_expert) ** (1 / 3):.0f}): maxerr "
       f"{float(jnp.abs(yd_xla - yd_pl).max()):.2e}")
 
-# --- the raw kernel: batched small GEMM ------------------------------------
+# --- the raw grouped op through the router ---------------------------------
 E, C, K, N = m.num_experts, 16, cfg.d_model, m.d_expert
+d = api.route("batched_gemm", (E, C, K, N), jnp.float32, policy=PALLAS)
+print(f"route(batched_gemm, {E}x{C}x{K}x{N}) -> use_pallas={d.use_pallas} "
+      f"source={d.source!r} blocks={d.blocks}")
+tuned = api.route("batched_gemm", (E, C, K, N), jnp.float32,
+                  policy=api.named_policy("tuned"))
+print(f"  under backend='tuned' (no profile on disk it degrades): "
+      f"source={tuned.source!r} blocks={tuned.blocks}")
+
 xb = jax.random.normal(key, (E, C, K), jnp.float32)
 wb = jax.random.normal(key, (E, K, N), jnp.float32)
-out = ops.batched_gemm(xb, wb, interpret=True)
+out = api.batched_gemm(xb, wb, policy=PALLAS)
 want = jnp.einsum("eck,ekn->ecn", xb, wb)
 print(f"batched_gemm ({E} x {C}x{K}x{N}): maxerr "
       f"{float(jnp.abs(out - want).max()):.2e}")
 
 # --- smallness criterion in action -----------------------------------------
 for T in (2, 64, 4096):
-    small = dispatch.small_enough(T, N, K)
-    print(f"  {T:5d} tokens x ({K}->{N}): IAAT path? {small}")
+    dec = api.route("gemm", (T, N, K), "S")
+    print(f"  {T:5d} tokens x ({K}->{N}): IAAT path? {dec.use_pallas} "
+          f"({dec.source})")

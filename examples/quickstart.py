@@ -1,7 +1,7 @@
 """Quickstart: the paper's technique end-to-end in 60 lines.
 
 1. install-time stage: generate the kernel table
-2. run-time stage: input-aware plan for a small GEMM
+2. run-time stage: one Policy + Router routes the small GEMM
 3. execute the kernel plan (Pallas interpret mode on CPU)
 4. compare against the traditional (pack-step) pipeline
 
@@ -12,6 +12,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import cost, dispatch, kernelgen, paper_table, plan
 from repro.core.tiler import tile_armv8
 from repro.kernels import ref
@@ -29,6 +30,13 @@ print(f"15x15 SGEMM_NN tiling: coeff={t.coeff} "
       f"(paper reports {paper_table.PAPER_FIG2_IAAT_COEFF}; "
       f"traditional 105), blocks={[(b.m, b.n) for b in t.blocks]}")
 
+# ONE routing API for every GEMM shape: install a Policy once, then every
+# entry (2-D gemm, ND matmul, grouped) consults the same Router.
+policy = api.install(api.Policy(backend="pallas", interpret=True))
+d = api.route("gemm", (45, 77, 33), "S")
+print(f"route(gemm, 45x77x33) -> use_pallas={d.use_pallas} "
+      f"source={d.source!r} (precedence: forced > profile > analytical)")
+
 p = plan.build_plan(45, 77, 33, "S", "NN")
 print(f"execution plan for 45x77x33: {p.num_kernel_calls} kernel call(s), "
       f"memops={p.memops()}")
@@ -37,12 +45,17 @@ print(f"execution plan for 45x77x33: {p.num_kernel_calls} kernel call(s), "
 rng = np.random.RandomState(0)
 a = jnp.asarray(rng.randn(45, 33), jnp.float32)
 b = jnp.asarray(rng.randn(33, 77), jnp.float32)
-with dispatch.configure(backend="pallas", interpret=True):
-    t0 = time.perf_counter()
-    out = dispatch.iaat_gemm(a, b)
-    dt = time.perf_counter() - t0
+t0 = time.perf_counter()
+out = api.gemm(a, b)                      # routed by the installed Policy
+dt = time.perf_counter() - t0
 err = float(jnp.abs(out - ref.ref_gemm(a, b)).max())
 print(f"IAAT path: maxerr={err:.2e} (interpret mode, {dt * 1e3:.0f} ms)")
+
+# the deprecated entry still works (shim over the same Policy + Router)
+with dispatch.configure(backend="pallas", interpret=True):
+    legacy = dispatch.iaat_gemm(a, b)
+print(f"legacy dispatch.iaat_gemm shim agrees: "
+      f"{float(jnp.abs(legacy - out).max()):.2e}")
 
 # -- 4. vs the traditional pack pipeline ------------------------------------
 trad = dispatch.traditional_gemm(a, b, interpret=True)

@@ -9,8 +9,7 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
-from repro.models.common import XLA
+from repro import api, configs
 from repro.models.registry import build
 from repro.serve.engine import ContinuousBatcher, Request
 
@@ -20,7 +19,11 @@ cfg = configs.get_smoke("glm4-9b")
 model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
-batcher = ContinuousBatcher(model, params, XLA, slots=4, max_len=128,
+# one Policy installed at model entry; the batcher snapshots it (swap in
+# named_policy("tuned") after `python -m repro.tune` to serve off the
+# measured DeviceProfile)
+api.install(api.named_policy("xla"))
+batcher = ContinuousBatcher(model, params, slots=4, max_len=128,
                             temperature=0.8, seed=0)
 rng = np.random.RandomState(0)
 t0 = time.time()

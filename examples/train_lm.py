@@ -30,6 +30,7 @@ olmo.smoke = lambda: cfg100m
 
 out = run(build_args([
     "--arch", "olmo-1b", "--smoke",
+    "--backend", "xla",               # any repro.api.POLICY_NAMES entry
     "--steps", str(args.steps),
     "--batch", "8", "--seq", "256",
     "--lr", "6e-4", "--warmup", "50",

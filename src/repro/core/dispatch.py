@@ -1,136 +1,51 @@
-"""Public IAAT API + smallness dispatch (ties the two stages together).
+"""Legacy IAAT dispatch entry — now a thin shim over :mod:`repro.api`.
 
-``iaat_gemm``   — BLAS-style C = alpha*op(A)@op(B) + beta*C.  Applies the
-                  paper's input-aware criterion: small problems run the
-                  planned pallas-kernel path (no pack, no boundary code),
-                  large problems fall through to XLA's packed GEMM, which
-                  is the "traditional BLAS" regime where packing is
-                  amortised and correct to prefer.
-``matmul``      — the framework entry every model layer routes through.
+The routing brain (config, smallness criterion, profile consultation,
+plan execution) lives in ``repro.api`` as one ``Policy`` + ``Router``
+covering every GEMM shape; this module keeps the original names alive:
+
+``DispatchConfig``  — alias of :class:`repro.api.Policy`.
+``configure``/``config`` — forward to :func:`repro.api.using` /
+                  :func:`repro.api.current_policy`.
+``decide``      — the 2-D routing entry, now ``Router.route("gemm", …)``.
+``iaat_gemm``   — BLAS-style C = alpha*op(A)@op(B) + beta*C.
+``matmul``      — the framework ND entry.
 ``traditional_gemm`` — the explicit pack-step pipeline (pad + blocked
-                  copy + fixed kernel), kept as the paper's baseline for
-                  the Fig. 3 pack-cost benchmark.
+                  copy + fixed kernel), kept here as the paper's baseline
+                  for the Fig. 3 pack-cost benchmark — it is NOT routed,
+                  which is the point.
 
-Config is a contextvar so tests/benchmarks/models can flip backends
-(`xla` for CPU dry-runs, `pallas` with interpret=True for kernel
-validation, `pallas` compiled on real TPUs, `tuned` to route by the
-measured DeviceProfile from ``repro.tune``) without threading arguments.
+New code should import ``repro.api`` directly (deprecation table in
+DESIGN.md §Policy & Router).
 """
 from __future__ import annotations
 
-import contextlib
-import contextvars
-import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import kernelgen, paper_table, plan as plan_mod, vmem
+from repro import api
+from repro.api import (  # noqa: F401  (re-exported compatibility surface)
+    Decision, Policy, TPU_SCALE, _xla_gemm, current_policy as config,
+    install, using as configure)
+from repro.core import kernelgen, vmem
 
-# TPU scale factor for the smallness thresholds: the paper's 80/32 bounds
-# are where pack+boundary overheads stop mattering on a 128-bit SIMD unit;
-# on a 128x128 MXU the equivalent crossover sits ~4x higher (napkin math in
-# DESIGN.md; revisited empirically in EXPERIMENTS.md §Perf).
-TPU_SCALE = 4.0
-
-
-@dataclasses.dataclass(frozen=True)
-class DispatchConfig:
-    backend: str = "auto"          # pallas | xla | auto | tuned
-    interpret: bool = True         # pallas interpret mode (CPU container)
-    method: str = "dp"             # tiler: dp (ours) | greedy (paper)
-    paper_thresholds: bool = False  # use the ARMv8 80/32 bounds verbatim
-    max_plan_regions: int = 64     # sanity valve
-
-    def threshold(self, trans: str) -> float:
-        base = (paper_table.PAPER_SMALL_THRESHOLD_TN if trans == "TN"
-                else paper_table.PAPER_SMALL_THRESHOLD)
-        return base if self.paper_thresholds else base * TPU_SCALE
-
-
-_CONFIG = contextvars.ContextVar("iaat_config", default=DispatchConfig())
-
-
-def config() -> DispatchConfig:
-    return _CONFIG.get()
-
-
-@contextlib.contextmanager
-def configure(**kw):
-    tok = _CONFIG.set(dataclasses.replace(_CONFIG.get(), **kw))
-    try:
-        yield _CONFIG.get()
-    finally:
-        _CONFIG.reset(tok)
+# The old config class is the new Policy, verbatim: same field names,
+# same defaults, plus the merged-in ``iaat``/``kernels`` Backend axes.
+DispatchConfig = Policy
 
 
 def small_enough(M: int, N: int, K: int, trans: str = "NN",
-                 cfg: Optional[DispatchConfig] = None) -> bool:
+                 cfg: Optional[Policy] = None) -> bool:
     """The paper's input-aware criterion: cbrt(MNK) <= threshold."""
-    cfg = cfg or config()
-    return (M * N * K) ** (1.0 / 3.0) <= cfg.threshold(trans)
-
-
-@dataclasses.dataclass(frozen=True)
-class Decision:
-    """How one GEMM call was routed — inspectable, so tests and the tune
-    report can prove whether a profile (vs the analytical model) decided."""
-    use_pallas: bool
-    source: str                    # "forced" | "profile" | "analytical"
-    sig: Optional["kernelgen.KernelSig"] = None   # tuned kernel override
+    return api.small_enough(M, N, K, trans, cfg)
 
 
 def decide(M: int, N: int, K: int, letter: str, trans: str,
-           cfg: Optional[DispatchConfig] = None) -> Decision:
-    """Route one problem: forced backends first, then the measured
-    DeviceProfile (``tuned`` mode), then the analytical criterion.
-
-    Fallback order (DESIGN.md §Tuning): a ``tuned`` backend with no
-    profile on disk, or with no entry for this size class, degrades to
-    exactly the ``auto`` analytical decision — tuning can only ever
-    refine the dispatch, never strand it."""
-    cfg = cfg or config()
-    if cfg.backend == "pallas":
-        return Decision(True, "forced")
-    if cfg.backend == "xla":
-        return Decision(False, "forced")
-    if cfg.backend == "tuned":
-        from repro.tune import profile as profile_mod
-        prof = profile_mod.active_profile()
-        if prof is not None:
-            entry = prof.lookup_dims(M, N, K, letter, trans)
-            if entry is not None and entry.measured:
-                if entry.prefer_pallas:
-                    return Decision(True, "profile", entry.sig)
-                return Decision(False, "profile")
-    return Decision(small_enough(M, N, K, trans, cfg), "analytical")
-
-
-def _trans_str(trans_a: bool, trans_b: bool) -> str:
-    return ("T" if trans_a else "N") + ("T" if trans_b else "N")
-
-
-def _problem_dims(a_shape, b_shape, trans: str):
-    M, Ka = (a_shape[1], a_shape[0]) if trans[0] == "T" else a_shape
-    Kb, N = (b_shape[1], b_shape[0]) if trans[1] == "T" else b_shape
-    if Ka != Kb:
-        raise ValueError(f"K mismatch: {a_shape} {trans[0]} vs {b_shape} {trans[1]}")
-    return M, N, Ka
-
-
-def _xla_gemm(a, b, c, alpha, beta, trans: str):
-    opa = a.T if trans[0] == "T" else a
-    opb = b.T if trans[1] == "T" else b
-    out = alpha * jnp.dot(opa, opb,
-                          preferred_element_type=jnp.promote_types(
-                              a.dtype, jnp.float32)
-                          if not jnp.issubdtype(a.dtype, jnp.complexfloating)
-                          else None)
-    out = out.astype(jnp.result_type(a.dtype, b.dtype))
-    if c is not None:
-        out = out + jnp.asarray(beta, c.dtype) * c
-    return out
+           cfg: Optional[Policy] = None) -> Decision:
+    """Route one 2-D problem (forced > profile > analytical)."""
+    return api.route("gemm", (M, N, K), letter, trans, policy=cfg)
 
 
 def iaat_gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None,
@@ -139,36 +54,12 @@ def iaat_gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None,
     """C = alpha * op(A) @ op(B) + beta * C with input-aware dispatch."""
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError("iaat_gemm is the 2-D BLAS entry; use matmul()")
-    cfg = config()
-    trans = _trans_str(trans_a, trans_b)
-    M, N, K = _problem_dims(a.shape, b.shape, trans)
-    letter = kernelgen.blas_letter(jnp.result_type(a.dtype, b.dtype))
-    d = decide(M, N, K, letter, trans, cfg)
-    if not d.use_pallas:
-        return _xla_gemm(a, b, c, alpha, beta, trans)
-    p = plan_mod.build_plan(M, N, K, letter, trans, cfg.method,
-                            override=d.sig)
-    if p.num_kernel_calls > cfg.max_plan_regions:
-        return _xla_gemm(a, b, c, alpha, beta, trans)
-    return plan_mod.execute(p, a, b, c, alpha, beta,
-                            interpret=cfg.interpret)
+    return api.gemm(a, b, c, alpha, beta, trans_a, trans_b)
 
 
 def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
-    """Framework matmul: (..., K) @ (K, N) with IAAT small-GEMM dispatch.
-
-    Leading dims of ``x`` are flattened into M.  This is the hook through
-    which every model layer (expert FFNs, decode-time projections, …)
-    reaches the paper's technique.
-    """
-    cfg = config()
-    if cfg.backend == "xla":
-        return jnp.matmul(x, w)
-    lead = x.shape[:-1]
-    K = x.shape[-1]
-    x2 = x.reshape((-1, K))
-    out = iaat_gemm(x2, w)
-    return out.reshape(lead + (w.shape[-1],))
+    """Framework matmul: (..., K) @ (K, N) with IAAT small-GEMM dispatch."""
+    return api.matmul(x, w)
 
 
 # --------------------------------------------------------------------------
@@ -188,8 +79,8 @@ def traditional_gemm(a, b, c=None, alpha=1.0, beta=0.0,
     run ONE fixed kernel over the padded problem.  Exists to measure what
     IAAT removes."""
     from repro.kernels import iaat_gemm as kmod
-    trans = _trans_str(trans_a, trans_b)
-    M, N, K = _problem_dims(a.shape, b.shape, trans)
+    trans = api._trans_str(trans_a, trans_b)
+    M, N, K = api._problem_dims(a.shape, b.shape, trans)
     letter = kernelgen.blas_letter(jnp.result_type(a.dtype, b.dtype))
     bm, bn, bk = _PACK_SIG[letter]
     # pack: transpose-normalise + pad to kernel multiples (copies!)

@@ -12,6 +12,11 @@ products with small, *input-dependent* tokens_g.  Two kernels:
   run-time-stage analogue for dropless MoE.  Rows must be padded per group
   to a multiple of the row-block (the dispatcher does this); padded rows
   are zero so they contribute nothing.
+
+Block selection flows through ``repro.api`` (one Router for every GEMM
+shape): a measured DeviceProfile entry for the per-group problem wins
+under ``Policy(backend="tuned")``, and :func:`pick_blocks` below is the
+analytical fallback the router uses for unmeasured classes.
 """
 from __future__ import annotations
 

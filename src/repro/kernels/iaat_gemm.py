@@ -40,7 +40,7 @@ def _cdiv(a: int, b: int) -> int:
     return -(a // -b)
 
 
-def _compiler_params(nk: int):
+def _compiler_params():
     try:
         return pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
@@ -130,7 +130,7 @@ def _real_call(sig: KernelSig, a, b, c, alpha, beta, interpret: bool):
                                out_dtype)
     kw = {}
     if not interpret:
-        cp = _compiler_params(nk)
+        cp = _compiler_params()
         if cp is not None:
             kw["compiler_params"] = cp
     return pl.pallas_call(
@@ -219,7 +219,7 @@ def _cx_call(sig: KernelSig, a, b, c, alpha, beta, interpret: bool):
                                real_dtype)
     kw = {}
     if not interpret:
-        cp = _compiler_params(nk)
+        cp = _compiler_params()
         if cp is not None:
             kw["compiler_params"] = cp
     outr, outi = pl.pallas_call(

@@ -12,8 +12,7 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
-from repro.models.common import XLA, Backend
+from repro import api, configs
 from repro.models.registry import build as build_model
 from repro.serve.engine import ContinuousBatcher, Request
 
@@ -29,7 +28,8 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--backend", default="xla",
+                    choices=list(api.POLICY_NAMES))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -38,8 +38,8 @@ def main() -> None:
     if cfg.family in ("encdec", "audio"):
         raise SystemExit("use a decoder-only arch for the serve demo")
     model = build_model(cfg)
-    be = XLA if args.backend == "xla" else Backend("pallas", interpret=True,
-                                                   iaat=True)
+    # model-entry policy install: the batcher snapshots the ambient policy
+    be = api.install(api.named_policy(args.backend, interpret=True))
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.RandomState(args.seed)
     batcher = ContinuousBatcher(model, params, be, slots=args.slots,

@@ -20,10 +20,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import api, configs
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import frontends
-from repro.models.common import XLA, Backend
 from repro.models.registry import build as build_model
 from repro.parallel import rules as R
 from repro.parallel.ctx import activation_axes, activation_sharding
@@ -53,7 +52,8 @@ def build_args(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--backend", default="xla",
+                    choices=list(api.POLICY_NAMES))
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--max-restarts", type=int, default=2)
     ap.add_argument("--inject-fault-at", type=int, default=-1,
@@ -68,8 +68,15 @@ def run(args) -> dict:
     mesh = make_production_mesh(multi_pod=args.multi_pod) \
         if args.production_mesh else make_host_mesh()
     rules = R.make_rules(cfg, mesh)
-    be = XLA if args.backend == "xla" else Backend("pallas", interpret=True,
-                                                   iaat=True)
+    # the single model-entry policy install: one frozen Policy for the
+    # whole run, threaded to every layer (no per-projection re-config).
+    # Training differentiates through the model, and the pallas
+    # flash-attention/SSD kernels have no JVP — so the non-GEMM kernel
+    # family is pinned to the XLA/ref paths while GEMM routing stays
+    # input-aware (auto) or profile-refined (tuned): the routed GEMM
+    # plan path carries a custom VJP.
+    be = api.install(api.named_policy(args.backend,
+                                      interpret=True).replace(kernels="xla"))
     tc = train_loop.TrainConfig(
         opt=opt.OptConfig(peak_lr=args.lr, warmup_steps=args.warmup,
                           decay_steps=max(args.steps, 10)),

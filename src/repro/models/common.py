@@ -1,46 +1,51 @@
 """Shared model machinery: the IAAT matmul hook, norms, RoPE, init/spec
 utilities, and the backend switch (pallas kernels vs XLA-compilable
 reference paths — the latter is what the multi-pod dry-run compiles).
+
+``Backend`` is now a deprecation shim: it constructs a
+:class:`repro.api.Policy` (the one frozen routing config), so every
+``be`` threaded through the model stack IS a Policy and the layers can
+consult the router directly — ``mm`` no longer re-enters a contextvar
+per projection.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import dispatch
+from repro import api
+from repro.api import Policy
 
 Params = Dict[str, Any]
 Specs = Dict[str, Any]
 
 
-@dataclasses.dataclass(frozen=True)
-class Backend:
-    """Execution backend selector threaded through every layer."""
-    kind: str = "xla"             # "xla" | "pallas"
-    interpret: bool = True        # pallas interpret mode (CPU container)
-    iaat: bool = False            # route small matmuls through IAAT dispatch
+def Backend(kind: str = "xla", interpret: bool = True,
+            iaat: bool = False) -> Policy:
+    """DEPRECATED shim — build a :class:`repro.api.Policy` instead.
 
-    @property
-    def pallas(self) -> bool:
-        return self.kind == "pallas"
+    Maps the old two-axis selector onto the unified Policy: ``kind``
+    becomes the non-GEMM kernel family, and ``iaat=True`` (input-aware
+    matmuls) means the router's analytical "auto" mode, exactly the
+    backend ``mm()`` used to force per projection."""
+    return Policy(backend="auto" if iaat
+                  else ("pallas" if kind == "pallas" else "xla"),
+                  kernels=kind, interpret=interpret, iaat=iaat)
 
 
 XLA = Backend("xla")
 PALLAS_INTERPRET = Backend("pallas", interpret=True, iaat=True)
 
 
-def mm(x: jax.Array, w: jax.Array, be: Backend) -> jax.Array:
+def mm(x: jax.Array, w: jax.Array,
+       be: Optional[Policy] = None) -> jax.Array:
     """The framework matmul: every projection goes through here, so the
-    paper's input-aware dispatch applies uniformly."""
-    if be.iaat:
-        with dispatch.configure(backend="auto", interpret=be.interpret):
-            return dispatch.matmul(x, w.astype(x.dtype))
-    return jnp.matmul(x, w.astype(x.dtype))
+    paper's input-aware dispatch applies uniformly.  ``be`` defaults to
+    the ambient installed policy (``api.install``/``api.using``)."""
+    return api.matmul(x, w.astype(x.dtype), policy=be)
 
 
 def rmsnorm(x: jax.Array, w: Optional[jax.Array], eps: float) -> jax.Array:

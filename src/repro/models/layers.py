@@ -125,8 +125,6 @@ def attention(p: Dict, x, be: Backend, cfg: ModelConfig, *,
     q = _split_heads(mm(x, p["wq"], be), H, hd)
     if cross_kv is not None:
         k, v = cross_kv
-        if positions is None and kv_cache is None:
-            pass
         y = _full_attn(q, k, v, be, causal=False, window=None, q_offset=0,
                        scale=scale)
         return mm(_merge_heads(y), p["wo"], be)
@@ -279,15 +277,20 @@ def _moe_combine(out_buf, meta, T: int, k: int):
 
 
 def _expert_ffn(p, buf, be: Backend, x_dtype):
-    """(…, E, C, d) @ experts — grouped small GEMMs (the paper's habitat)."""
+    """(…, E, C, d) @ experts — grouped small GEMMs (the paper's habitat).
+
+    The 3-D (per-shard) case routes each grouped product through
+    ``api.batched_gemm``, so the per-group (C, K, N) problem gets the
+    same input-aware, profile-refined treatment as the 2-D path (XLA
+    einsum when the router declines pallas)."""
     wg = p["w_gate"].astype(x_dtype)
     wu = p["w_up"].astype(x_dtype)
     wd = p["w_down"].astype(x_dtype)
-    if be.pallas and buf.ndim == 3:
-        from repro.kernels import ops
-        h = (jax.nn.silu(ops.batched_gemm(buf, wg, interpret=be.interpret))
-             * ops.batched_gemm(buf, wu, interpret=be.interpret))
-        return ops.batched_gemm(h, wd, interpret=be.interpret)
+    if buf.ndim == 3 and be.pallas:
+        from repro import api
+        h = (jax.nn.silu(api.batched_gemm(buf, wg, policy=be))
+             * api.batched_gemm(buf, wu, policy=be))
+        return api.batched_gemm(h, wd, policy=be)
     eq = "ecd,edf->ecf" if buf.ndim == 3 else "gecd,edf->gecf"
     eq2 = "ecf,efd->ecd" if buf.ndim == 3 else "gecf,efd->gecd"
     h = jax.nn.silu(jnp.einsum(eq, buf, wg)) * jnp.einsum(eq, buf, wu)

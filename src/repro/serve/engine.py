@@ -2,8 +2,10 @@
 scheduler (slot-based, request queue, per-slot EOS/length tracking).
 
 decode-time projections are (B x d) @ (d x N) GEMMs with tiny B — the
-paper's small-GEMM regime; with ``Backend(iaat=True)`` they route through
-the IAAT plan path.
+paper's small-GEMM regime.  The engine takes ONE :class:`repro.api.Policy`
+at construction (installed for the whole serving session — not re-entered
+per projection); ``Policy(backend="tuned")`` routes those decode GEMMs
+and the MoE expert FFN by the measured DeviceProfile.
 """
 from __future__ import annotations
 
@@ -14,17 +16,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import Backend
+from repro import api
+from repro.api import Policy
 from repro.models.registry import Model
 
 
-def make_serve_fns(model: Model, be: Backend):
-    """Returns (prefill_fn, decode_fn), both jit'd; decode donates cache."""
+def make_serve_fns(model: Model, be: Optional[Policy] = None):
+    """Returns (prefill_fn, decode_fn), both jit'd; decode donates cache.
+    ``be=None`` snapshots the ambient installed policy once, here — the
+    model-entry install point."""
+    pol = be if be is not None else api.current_policy()
+
     def prefill(params, batch):
-        return model.prefill(params, batch, be)
+        return model.prefill(params, batch, pol)
 
     def decode(params, tokens, cache):
-        return model.decode(params, {"tokens": tokens}, cache, be)
+        return model.decode(params, {"tokens": tokens}, cache, pol)
 
     return (jax.jit(prefill),
             jax.jit(decode, donate_argnums=(2,)))
@@ -52,9 +59,12 @@ class ContinuousBatcher:
     decode steps — the scheduling contract (admit / decode / evict-on-EOS)
     is the real one."""
 
-    def __init__(self, model: Model, params, be: Backend, *,
-                 slots: int = 4, max_len: int = 256, eos: int = 2,
+    def __init__(self, model: Model, params, be: Optional[Policy] = None,
+                 *, slots: int = 4, max_len: int = 256, eos: int = 2,
                  temperature: float = 0.0, seed: int = 0):
+        # the policy is resolved ONCE at engine construction (model
+        # entry); every projection below reads this frozen object.
+        be = be if be is not None else api.current_policy()
         self.model, self.params, self.be = model, params, be
         self.slots, self.max_len, self.eos = slots, max_len, eos
         self.temperature = temperature

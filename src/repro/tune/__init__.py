@@ -6,8 +6,10 @@ predicts; this package *measures*.  It buckets the continuous
 (classes.py), micro-benchmarks the analytically-promising kernel
 candidates plus the XLA baseline per class (timer.py + search.py), and
 persists the winners as a versioned per-device :class:`DeviceProfile`
-(profile.py) that ``dispatch.configure(backend="tuned")`` consults at
-call time, falling back to the analytical model for unmeasured classes.
+(profile.py) that the ``repro.api`` Router consults at call time under
+``Policy(backend="tuned")`` — for the 2-D entry, ND matmul, and the
+grouped MoE/serving paths alike — falling back to the analytical model
+for unmeasured classes.
 
 ``python -m repro.tune`` runs the sweep and writes the profile.
 """

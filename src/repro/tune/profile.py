@@ -14,10 +14,12 @@ misapplied to a different accelerator.  ``merge`` unions two profiles
 entry-wise, keeping the better-measured pallas time per class, so
 incremental sweeps (one letter today, another tomorrow) compose.
 
-The *active* profile is process-global state consulted by
-``dispatch.configure(backend="tuned")``; it is lazily loaded from disk
-on first tuned-mode dispatch and can be pinned/cleared explicitly by
-tests and the CLI.
+The *active* profile is process-global state consulted by the
+``repro.api`` Router whenever a ``Policy(backend="tuned")`` routes any
+op — 2-D gemm, ND matmul, or the grouped MoE/serving paths (their
+per-group (C, K, N) problem keys the same class table).  It is lazily
+loaded from disk on first tuned-mode dispatch and can be
+pinned/cleared explicitly by tests and the CLI.
 """
 from __future__ import annotations
 
