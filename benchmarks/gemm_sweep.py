@@ -19,6 +19,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
+from repro import api
 from repro.core import cost, dispatch, paper_table, plan as plan_mod
 from repro.core.tiler import tile_armv8
 from repro.kernels import ref
@@ -68,12 +69,12 @@ def run(csv_rows) -> None:
     warm = (time.perf_counter() - t0)
     csv_rows.append(("gemm_sweep/plan_cold_us", round(cold, 1), 1))
     csv_rows.append(("gemm_sweep/plan_cached_us", round(warm, 3), 1000))
-    # correctness spot-check through the full dispatch path
+    # correctness spot-check through the full routed path
     rng = np.random.RandomState(0)
     a = jnp.asarray(rng.randn(45, 33), jnp.float32)
     b = jnp.asarray(rng.randn(33, 77), jnp.float32)
-    with dispatch.configure(backend="pallas", interpret=True):
-        out = dispatch.iaat_gemm(a, b)
+    with api.using(backend="pallas", interpret=True):
+        out = api.gemm(a, b)
     err = float(jnp.abs(out - ref.ref_gemm(a, b)).max())
     csv_rows.append(("gemm_sweep/dispatch_45x77x33_maxerr", 0.0, err))
     assert err < 1e-4

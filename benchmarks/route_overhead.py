@@ -1,0 +1,74 @@
+"""Router observability overhead micro-benchmark (the <5% gate).
+
+Times ``Router.route`` over a fixed shape mix with the obs shape log on
+vs off (``obs.set_enabled``).  The log entry doubles as a decision memo
+— route is pure in (op, dims, dtype, trans, policy identity, profile
+generation) — so the enabled path is expected to be *faster* on repeat
+shapes, not just within 5%.  The acceptance row reports the relative
+overhead; ``run()`` asserts the gate.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+#: serving-like shape mix: a handful of distinct decode/prefill GEMMs
+#: hit over and over (the memo's best case, and the realistic one — the
+#: paper's premise is repeated same-size small GEMMs).
+SHAPES = [(4, 512, 512), (4, 2048, 512), (16, 512, 512),
+          (45, 77, 33), (128, 128, 128), (300, 300, 300)]
+
+
+def _time_route(router, reps: int) -> float:
+    """Seconds for ``reps`` passes over the shape mix."""
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for dims in SHAPES:
+            router.route("gemm", dims, "S", "NN")
+    return time.perf_counter() - t0
+
+
+def measure(reps: int = 2000):
+    """Returns (enabled_us, disabled_us, overhead_fraction) per call."""
+    from repro import api, obs
+
+    router = api.Router(api.Policy(backend="auto"))
+    ncalls = reps * len(SHAPES)
+    was = obs.enabled()
+    try:
+        obs.set_enabled(True)
+        obs.ROUTES.reset()
+        _time_route(router, 50)                       # warm the memo
+        t_on = _time_route(router, reps) / ncalls
+        obs.set_enabled(False)
+        _time_route(router, 50)
+        t_off = _time_route(router, reps) / ncalls
+    finally:
+        obs.set_enabled(was)
+    return t_on * 1e6, t_off * 1e6, (t_on - t_off) / t_off
+
+
+def run(csv_rows) -> None:
+    on_us, off_us, over = measure()
+    csv_rows.append(("route_overhead/enabled_us", round(on_us, 3), 1))
+    csv_rows.append(("route_overhead/disabled_us", round(off_us, 3), 1))
+    csv_rows.append(("route_overhead/overhead_pct", round(over * 100, 1),
+                     "gate<5"))
+    assert over < 0.05, f"route() obs overhead {over:.1%} >= 5%"
+
+
+def main() -> None:
+    on_us, off_us, over = measure()
+    print(f"route() with obs on:  {on_us:.3f} us/call")
+    print(f"route() with obs off: {off_us:.3f} us/call")
+    print(f"overhead: {over:+.1%} (gate: <5%)")
+
+
+if __name__ == "__main__":
+    main()

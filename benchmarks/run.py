@@ -17,7 +17,8 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 def main() -> None:
     from benchmarks import (gemm_sweep, kernel_table, pack_cost, roofline,
-                            tiling_memops, tune_report)
+                            route_overhead, serve_stream, tiling_memops,
+                            tune_report)
     suites = [
         ("tiling_memops", tiling_memops.run),   # paper Fig. 2
         ("pack_cost", pack_cost.run),           # paper Fig. 3
@@ -25,9 +26,12 @@ def main() -> None:
         ("gemm_sweep", gemm_sweep.run),         # paper Figs. 4-7
         ("roofline", roofline.run),             # framework deliverable (g)
         ("tune_report", tune_report.run),       # empirical vs analytical
+        ("route_overhead", route_overhead.run),  # obs <5% gate
+        ("serve_stream", serve_stream.run),     # Poisson serving stream
     ]
     if "--quick" in sys.argv[1:]:
-        quick = {"tiling_memops", "kernel_table", "roofline", "tune_report"}
+        quick = {"tiling_memops", "kernel_table", "roofline", "tune_report",
+                 "route_overhead"}
         suites = [s for s in suites if s[0] in quick]
     rows = []
     for name, fn in suites:

@@ -1,0 +1,133 @@
+"""Streaming serving benchmark: Poisson arrivals against the wave-based
+continuous batcher (the paper's decode-time small-GEMM regime under a
+realistic open-loop load).
+
+Requests arrive by a seeded exponential inter-arrival process and are
+submitted to :class:`repro.serve.engine.ContinuousBatcher` at their
+arrival times; the engine's own :mod:`repro.obs` instrumentation then
+prices everything we report — time-to-first-token, end-to-end latency
+(p50/p99), decode throughput, and wave occupancy.  ``main()`` exports
+the numbers as ``BENCH_serve.json`` (the repo's first checked-in
+observability baseline); ``run()`` folds the headline rows into the
+``benchmarks/run.py`` CSV.
+
+    PYTHONPATH=src python benchmarks/serve_stream.py --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def stream(n_requests: int = 16, rate_hz: float = 4.0, *, slots: int = 4,
+           max_new: int = 8, prompt_lo: int = 4, prompt_hi: int = 16,
+           model_name: str = "glm4-9b", policy: str = "xla",
+           seed: int = 0):
+    """Run the open-loop stream; returns (meta, wall_s, tokens).
+
+    Arrival times are drawn up front (seeded, reproducible); the loop
+    submits every request whose arrival time has passed, runs one wave,
+    and otherwise sleeps until the next arrival — so admission wait
+    honestly includes the wave the scheduler was busy with.
+    """
+    import jax
+    import numpy as np
+
+    from repro import api, configs, obs
+    from repro.models.registry import build
+    from repro.serve.engine import ContinuousBatcher, Request
+
+    cfg = configs.get_smoke(model_name)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    api.install(api.named_policy(policy))
+    batcher = ContinuousBatcher(model, params, slots=slots, max_len=128,
+                                temperature=0.8, seed=seed)
+
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=n_requests)
+    prompts = [rng.randint(0, cfg.vocab,
+                           rng.randint(prompt_lo, prompt_hi)).astype(np.int32)
+               for _ in range(n_requests)]
+    arrivals = np.cumsum(gaps)
+
+    # warm the jit caches off the clock: one throwaway wave end-to-end.
+    batcher.submit(Request(-1, prompts[0], max_new=2))
+    batcher.run()
+    obs.reset()
+
+    t0 = time.perf_counter()
+    nxt = 0
+    while len(batcher.done) < n_requests:
+        now = time.perf_counter() - t0
+        while nxt < n_requests and arrivals[nxt] <= now:
+            batcher.submit(Request(nxt, prompts[nxt], max_new=max_new))
+            nxt += 1
+        if not batcher.step() and nxt < n_requests:
+            time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
+    wall = time.perf_counter() - t0
+    tokens = sum(len(v) for v in batcher.done.values())
+    meta = {
+        "model": model_name, "policy": policy, "slots": slots,
+        "requests": n_requests, "rate_hz": rate_hz, "max_new": max_new,
+        "seed": seed, "wall_s": round(wall, 3), "tokens": tokens,
+        "tokens_per_s": round(tokens / wall, 2),
+    }
+    return meta, wall, tokens
+
+
+def _headline(meta):
+    from repro import obs
+    e2e = obs.REGISTRY.get("serve.e2e_us")
+    ttft = obs.REGISTRY.get("serve.ttft_us")
+    rows = [("serve_stream/tokens_per_s", meta["tokens_per_s"],
+             meta["tokens"])]
+    if e2e is not None and e2e.n:
+        rows += [("serve_stream/e2e_p50_us", round(e2e.p50, 1), e2e.n),
+                 ("serve_stream/e2e_p99_us", round(e2e.p99, 1), e2e.n)]
+    if ttft is not None and ttft.n:
+        rows += [("serve_stream/ttft_p50_us", round(ttft.p50, 1), ttft.n)]
+    return rows
+
+
+def run(csv_rows) -> None:
+    """benchmarks/run.py entry: a small stream, headline rows only."""
+    meta, _, _ = stream(n_requests=8, rate_hz=4.0, max_new=4)
+    csv_rows.extend(_headline(meta))
+
+
+def main() -> None:
+    from repro import obs
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate-hz", type=float, default=4.0)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--model", default="glm4-9b")
+    ap.add_argument("--policy", default="xla",
+                    choices=("xla", "pallas", "auto", "tuned"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-export", action="store_true",
+                    help="print the report without writing BENCH_serve.json")
+    args = ap.parse_args()
+    meta, wall, tokens = stream(
+        args.requests, args.rate_hz, slots=args.slots, max_new=args.max_new,
+        model_name=args.model, policy=args.policy, seed=args.seed)
+    for name, val, n in _headline(meta):
+        print(f"{name}: {val}  (n={n})")
+    print(f"{meta['requests']} requests in {wall:.2f}s "
+          f"-> {meta['tokens_per_s']} tok/s")
+    if not args.no_export:
+        path = obs.export_bench("serve", meta)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

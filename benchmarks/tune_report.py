@@ -17,7 +17,7 @@ from __future__ import annotations
 
 
 def run(csv_rows) -> None:
-    from repro.core import dispatch
+    from repro import api
     from repro.tune import classes as classes_mod, search
 
     prof = search.sweep(["S"], ["NN"], min_dim=8, max_dim=64,
@@ -27,9 +27,9 @@ def run(csv_rows) -> None:
     for key, entry in sorted(prof.entries.items()):
         sc = classes_mod.SizeClass.from_key(key)
         M, N, K = classes_mod.representative(sc)
-        analytical = dispatch.decide(
-            M, N, K, sc.letter, sc.trans,
-            dispatch.DispatchConfig(backend="auto")).use_pallas
+        analytical = api.route(
+            "gemm", (M, N, K), sc.letter, sc.trans,
+            policy=api.Policy(backend="auto")).use_pallas
         tuned = entry.prefer_pallas
         agree += analytical == tuned
         t_an = entry.pallas if analytical else entry.xla

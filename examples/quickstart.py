@@ -51,12 +51,6 @@ dt = time.perf_counter() - t0
 err = float(jnp.abs(out - ref.ref_gemm(a, b)).max())
 print(f"IAAT path: maxerr={err:.2e} (interpret mode, {dt * 1e3:.0f} ms)")
 
-# the deprecated entry still works (shim over the same Policy + Router)
-with dispatch.configure(backend="pallas", interpret=True):
-    legacy = dispatch.iaat_gemm(a, b)
-print(f"legacy dispatch.iaat_gemm shim agrees: "
-      f"{float(jnp.abs(legacy - out).max()):.2e}")
-
 # -- 4. vs the traditional pack pipeline ------------------------------------
 trad = dispatch.traditional_gemm(a, b, interpret=True)
 print(f"traditional pack path: maxerr="

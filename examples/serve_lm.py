@@ -9,7 +9,7 @@ import time
 import jax
 import numpy as np
 
-from repro import api, configs
+from repro import api, configs, obs
 from repro.models.registry import build
 from repro.serve.engine import ContinuousBatcher, Request
 
@@ -36,3 +36,7 @@ tokens = sum(len(v) for v in done.values())
 for rid in sorted(done)[:3]:
     print(f"req {rid}: {done[rid][:10]} ...")
 print(f"{len(done)} requests, {tokens} tokens, {tokens / dt:.1f} tok/s")
+
+# everything above was traced through repro.obs — dump the metrics the
+# engine recorded (ttft/e2e percentiles, wave occupancy, decode rate)
+print(obs.report_str())

@@ -28,9 +28,13 @@ Decision precedence, uniform across ops (DESIGN.md §Policy & Router):
 
 Executors (:func:`gemm`, :func:`matmul`, :func:`batched_gemm`,
 :func:`ragged_gemm`) act on the Decision so callers never branch on
-backend themselves.  The old entry points (``dispatch.iaat_gemm``,
-``dispatch.configure``, ``models.common.Backend``, ``ops.gemm_jit``)
-remain as deprecation shims forwarding here.
+backend themselves.  (The pre-Policy entry points — ``dispatch.iaat_gemm``,
+``dispatch.configure``, ``models.common.Backend``, ``ops.gemm_jit`` —
+are gone; the migration table lives in DESIGN.md §Policy & Router.)
+
+Every ``route`` call is recorded in :data:`repro.obs.ROUTES` — the
+shape histogram that seeds traffic-aware tuning — and memoized through
+the same entry (see ``Router.route``).
 """
 from __future__ import annotations
 
@@ -42,6 +46,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import kernelgen, paper_table, plan as plan_mod
 
 # TPU scale factor for the smallness thresholds: the paper's 80/32 bounds
@@ -223,11 +228,36 @@ class Router:
         Fallback order (DESIGN.md §Tuning): a ``tuned`` backend with no
         profile on disk, or with no entry for this size class, degrades
         to exactly the ``auto`` analytical decision — tuning can only
-        ever refine the dispatch, never strand it."""
+        ever refine the dispatch, never strand it.
+
+        With observability on (the default), every call lands in the
+        ``obs.ROUTES`` shape log — the observed input distribution that
+        seeds traffic-aware tuning.  The log entry doubles as a decision
+        memo: a decision is pure in (op, dims, dtype, trans), the
+        resolved Policy *object* (held by identity — frozen, so identity
+        implies equal fields) and the active-DeviceProfile generation,
+        so a repeat shape is one dict hit instead of a recompute.
+        ``REPRO_OBS=0`` bypasses all of it with one attribute check."""
         if op not in OPS:
             raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
         pol = self.policy
-        letter = _letter_of(dtype)
+        rl = obs.ROUTES
+        if rl.on:
+            letter = dtype if type(dtype) is str else \
+                kernelgen.blas_letter(dtype)
+            key = (op, letter, trans, tuple(dims), id(pol))
+            h = rl.hits.get(key)
+            if h is not None and h[1] is pol and h[2] == rl.gen:
+                h[0] += 1
+                return h[3]
+            d = self._decide(op, dims, letter, trans, pol)
+            rl.note(key, pol, d)
+            return d
+        return self._decide(op, dims, _letter_of(dtype), trans, pol)
+
+    def _decide(self, op: str, dims, letter: str, trans: str,
+                pol: Policy) -> Decision:
+        """The actual decision procedure (memoized via ``route``)."""
         if op in _GROUPED:
             return self._route_grouped(op, dims, letter, pol)
         if op == "matmul":

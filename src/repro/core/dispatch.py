@@ -1,70 +1,21 @@
-"""Legacy IAAT dispatch entry — now a thin shim over :mod:`repro.api`.
+"""The paper's *traditional* (pack-step) GEMM baseline.
 
-The routing brain (config, smallness criterion, profile consultation,
-plan execution) lives in ``repro.api`` as one ``Policy`` + ``Router``
-covering every GEMM shape; this module keeps the original names alive:
+The routing brain lives in :mod:`repro.api` (one ``Policy`` + ``Router``
+covering every GEMM shape); the deprecation shims that used to forward
+the old names (``DispatchConfig``/``configure``/``decide``/``iaat_gemm``)
+have been removed — import ``repro.api`` directly.
 
-``DispatchConfig``  — alias of :class:`repro.api.Policy`.
-``configure``/``config`` — forward to :func:`repro.api.using` /
-                  :func:`repro.api.current_policy`.
-``decide``      — the 2-D routing entry, now ``Router.route("gemm", …)``.
-``iaat_gemm``   — BLAS-style C = alpha*op(A)@op(B) + beta*C.
-``matmul``      — the framework ND entry.
-``traditional_gemm`` — the explicit pack-step pipeline (pad + blocked
-                  copy + fixed kernel), kept here as the paper's baseline
-                  for the Fig. 3 pack-cost benchmark — it is NOT routed,
-                  which is the point.
-
-New code should import ``repro.api`` directly (deprecation table in
-DESIGN.md §Policy & Router).
+What remains here is the explicit pack-step pipeline (pad + blocked copy
++ ONE fixed kernel), kept as the paper's §I baseline for the Fig. 3
+pack-cost benchmark — it is deliberately NOT routed, which is the point:
+it measures what IAAT removes.
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 
 from repro import api
-from repro.api import (  # noqa: F401  (re-exported compatibility surface)
-    Decision, Policy, TPU_SCALE, _xla_gemm, current_policy as config,
-    install, using as configure)
 from repro.core import kernelgen, vmem
-
-# The old config class is the new Policy, verbatim: same field names,
-# same defaults, plus the merged-in ``iaat``/``kernels`` Backend axes.
-DispatchConfig = Policy
-
-
-def small_enough(M: int, N: int, K: int, trans: str = "NN",
-                 cfg: Optional[Policy] = None) -> bool:
-    """The paper's input-aware criterion: cbrt(MNK) <= threshold."""
-    return api.small_enough(M, N, K, trans, cfg)
-
-
-def decide(M: int, N: int, K: int, letter: str, trans: str,
-           cfg: Optional[Policy] = None) -> Decision:
-    """Route one 2-D problem (forced > profile > analytical)."""
-    return api.route("gemm", (M, N, K), letter, trans, policy=cfg)
-
-
-def iaat_gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None,
-              alpha=1.0, beta=0.0, trans_a: bool = False,
-              trans_b: bool = False) -> jax.Array:
-    """C = alpha * op(A) @ op(B) + beta * C with input-aware dispatch."""
-    if a.ndim != 2 or b.ndim != 2:
-        raise ValueError("iaat_gemm is the 2-D BLAS entry; use matmul()")
-    return api.gemm(a, b, c, alpha, beta, trans_a, trans_b)
-
-
-def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
-    """Framework matmul: (..., K) @ (K, N) with IAAT small-GEMM dispatch."""
-    return api.matmul(x, w)
-
-
-# --------------------------------------------------------------------------
-# The traditional (pack-step) pipeline — the paper's baseline.
-# --------------------------------------------------------------------------
 
 _PACK_SIG = {"S": (128, 256, 256), "D": (64, 128, 128),
              "C": (64, 128, 128), "Z": (32, 128, 128),

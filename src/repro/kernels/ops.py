@@ -25,21 +25,6 @@ def gemm(a, b, c=None, alpha=1.0, beta=0.0, trans_a=False, trans_b=False):
     return api.gemm(a, b, c, alpha, beta, trans_a, trans_b)
 
 
-@functools.partial(jax.jit, static_argnames=("trans_a", "trans_b",
-                                             "alpha", "beta", "backend",
-                                             "interpret", "method"))
-def gemm_jit(a, b, c=None, *, alpha=1.0, beta=0.0, trans_a=False,
-             trans_b=False, backend="auto", interpret=True, method="dp"):
-    """DEPRECATED shim — jit ``api.gemm`` under an explicit Policy
-    instead.  Kept so pre-Policy callers (and the CI example smoke)
-    keep compiling.  Layers onto the ambient policy (read at trace
-    time, exactly like the old per-call ``dispatch.configure``), so
-    ambient ``paper_thresholds``/``max_plan_regions`` still apply."""
-    pol = api.current_policy().replace(backend=backend,
-                                       interpret=interpret, method=method)
-    return api.gemm(a, b, c, alpha, beta, trans_a, trans_b, policy=pol)
-
-
 def matmul(x, w):
     """Framework ND matmul (ambient policy)."""
     return api.matmul(x, w)

@@ -20,7 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import api, configs
+from repro import api, configs, obs
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import frontends
 from repro.models.registry import build as build_model
@@ -117,12 +117,16 @@ def run(args) -> dict:
                 if step == args.inject_fault_at and attempt == 0:
                     raise fault.SimulatedFault(f"injected at step {step}")
                 monitor.start()
-                hb = data.batch(step, host=jax.process_index(),
-                                num_hosts=jax.process_count())
-                gb = data_mod.make_global_batch(hb, data_sh)
-                state, m = jit_step(state, gb)
-                m = {k: float(v) for k, v in m.items()}
+                t0 = time.perf_counter()
+                with obs.span("train.step"):
+                    hb = data.batch(step, host=jax.process_index(),
+                                    num_hosts=jax.process_count())
+                    gb = data_mod.make_global_batch(hb, data_sh)
+                    state, m = jit_step(state, gb)
+                    m = {k: float(v) for k, v in m.items()}
                 monitor.stop(step)
+                train_loop.record_step(step, m,
+                                       time.perf_counter() - t0)
                 metrics_out.update(m, step=step)
                 if step % args.log_every == 0 or step == args.steps - 1:
                     log.info("step %d loss %.4f gnorm %.3f lr %.2e",

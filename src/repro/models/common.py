@@ -1,12 +1,11 @@
 """Shared model machinery: the IAAT matmul hook, norms, RoPE, init/spec
-utilities, and the backend switch (pallas kernels vs XLA-compilable
-reference paths — the latter is what the multi-pod dry-run compiles).
+utilities.
 
-``Backend`` is now a deprecation shim: it constructs a
-:class:`repro.api.Policy` (the one frozen routing config), so every
-``be`` threaded through the model stack IS a Policy and the layers can
-consult the router directly — ``mm`` no longer re-enters a contextvar
-per projection.
+The ``be`` threaded through the model stack is a
+:class:`repro.api.Policy` — the one frozen routing config — so the
+layers consult the router directly; ``mm`` never re-enters a contextvar
+per projection.  (The old two-axis ``Backend`` selector is gone; use
+``api.Policy`` / ``api.named_policy``.)
 """
 from __future__ import annotations
 
@@ -22,22 +21,11 @@ from repro.api import Policy
 Params = Dict[str, Any]
 Specs = Dict[str, Any]
 
-
-def Backend(kind: str = "xla", interpret: bool = True,
-            iaat: bool = False) -> Policy:
-    """DEPRECATED shim — build a :class:`repro.api.Policy` instead.
-
-    Maps the old two-axis selector onto the unified Policy: ``kind``
-    becomes the non-GEMM kernel family, and ``iaat=True`` (input-aware
-    matmuls) means the router's analytical "auto" mode, exactly the
-    backend ``mm()`` used to force per projection."""
-    return Policy(backend="auto" if iaat
-                  else ("pallas" if kind == "pallas" else "xla"),
-                  kernels=kind, interpret=interpret, iaat=iaat)
-
-
-XLA = Backend("xla")
-PALLAS_INTERPRET = Backend("pallas", interpret=True, iaat=True)
+#: Canonical policies for the two reference operating points: the
+#: XLA-compilable dry-run stack, and pallas kernels with input-aware
+#: GEMM routing under interpret mode (the CI container).
+XLA = api.named_policy("xla")
+PALLAS_INTERPRET = api.named_policy("pallas")
 
 
 def mm(x: jax.Array, w: jax.Array,

@@ -17,7 +17,8 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.common import (Backend, mm, ninit, rmsnorm, stack_init,
+from repro.api import Policy
+from repro.models.common import (mm, ninit, rmsnorm, stack_init,
                                  stack_specs)
 from repro.models.lm import LMCache, _remat
 
@@ -79,7 +80,7 @@ def encdec_specs(cfg: ModelConfig) -> Dict:
     }
 
 
-def encode(params, cfg: ModelConfig, be: Backend, src_embeds) -> jax.Array:
+def encode(params, cfg: ModelConfig, be: Policy, src_embeds) -> jax.Array:
     """src_embeds: (B, S_src, d) (stubbed frontend output)."""
     x = src_embeds.astype(cfg.compute_dtype)
     positions = jnp.arange(x.shape[1])
@@ -122,7 +123,7 @@ def _dec_block(blk, x, enc_or_kv, cfg, be, *, positions=None, kv=None,
     return x + L.mlp(blk["mlp"], h, be), kv_new
 
 
-def forward_train(params, cfg: ModelConfig, be: Backend, tokens,
+def forward_train(params, cfg: ModelConfig, be: Policy, tokens,
                   src_embeds) -> Tuple[jax.Array, jax.Array]:
     """Teacher-forced training: (logits (B, S_tgt, Vp), aux=0)."""
     enc = encode(params, cfg, be, src_embeds)
@@ -168,7 +169,7 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, src_len: int,
     )
 
 
-def prefill(params, cfg: ModelConfig, be: Backend, tokens, src_embeds,
+def prefill(params, cfg: ModelConfig, be: Policy, tokens, src_embeds,
             cache_len: Optional[int] = None
             ) -> Tuple[jax.Array, EncDecCache]:
     enc = encode(params, cfg, be, src_embeds)
@@ -201,7 +202,7 @@ def prefill(params, cfg: ModelConfig, be: Backend, tokens, src_embeds,
     return mm(x, params["unembed"], be)[:, 0], cache
 
 
-def decode(params, cfg: ModelConfig, be: Backend, tokens,
+def decode(params, cfg: ModelConfig, be: Policy, tokens,
            cache: EncDecCache) -> Tuple[jax.Array, EncDecCache]:
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
     pos = cache.pos

@@ -3,7 +3,7 @@ gated MLP, and capacity-routed MoE with sort-based dispatch.
 
 Every projection goes through ``common.mm`` (the IAAT dispatch hook); the
 attention inner loop switches between the Pallas flash kernel and the
-chunked-XLA oracle by ``Backend``; MoE expert compute switches between
+chunked-XLA oracle by the ``Policy``; MoE expert compute switches between
 ``ops.batched_gemm`` (Pallas, the paper's batched-small-GEMM habitat) and
 a batched einsum (XLA path for the multi-pod dry-run).
 """
@@ -18,7 +18,8 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ref
-from repro.models.common import Backend, mm, ninit, rmsnorm, rope
+from repro.api import Policy
+from repro.models.common import mm, ninit, rmsnorm, rope
 from repro.parallel.ctx import constrain
 
 
@@ -66,7 +67,7 @@ def _merge_heads(x):
     return x.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
 
 
-def _full_attn(q, k, v, be: Backend, *, causal, window, q_offset, scale):
+def _full_attn(q, k, v, be: Policy, *, causal, window, q_offset, scale):
     if be.pallas:
         from repro.kernels import ops
         return ops.flash_attention(q, k, v, causal=causal, window=window,
@@ -107,7 +108,7 @@ def decode_attend(q, k_buf, v_buf, pos, *, window: Optional[int],
     return out.reshape(B, H, 1, hd).astype(q.dtype)
 
 
-def attention(p: Dict, x, be: Backend, cfg: ModelConfig, *,
+def attention(p: Dict, x, be: Policy, cfg: ModelConfig, *,
               causal: bool = True, window: Optional[int] = None,
               positions=None, kv_cache: Optional[Tuple] = None,
               pos=None, cross_kv: Optional[Tuple] = None,
@@ -180,7 +181,7 @@ def mlp_specs(cfg: ModelConfig) -> Dict:
             "wd": ("mlp", "embed")}
 
 
-def mlp(p: Dict, x, be: Backend):
+def mlp(p: Dict, x, be: Policy):
     h = jax.nn.silu(mm(x, p["wg"], be)) * mm(x, p["wu"], be)
     h = constrain(h, "batch", None, "mlp")
     return mm(h, p["wd"], be)
@@ -276,7 +277,7 @@ def _moe_combine(out_buf, meta, T: int, k: int):
     return jnp.einsum("tkd,tk->td", rows, top_p.astype(rows.dtype))
 
 
-def _expert_ffn(p, buf, be: Backend, x_dtype):
+def _expert_ffn(p, buf, be: Policy, x_dtype):
     """(…, E, C, d) @ experts — grouped small GEMMs (the paper's habitat).
 
     The 3-D (per-shard) case routes each grouped product through
@@ -302,7 +303,7 @@ def _expert_ffn(p, buf, be: Backend, x_dtype):
     return out
 
 
-def moe(p: Dict, x, be: Backend, cfg: ModelConfig):
+def moe(p: Dict, x, be: Policy, cfg: ModelConfig):
     """x: (B, S, d) -> (y, aux).
 
     §Perf iteration 2/4 (beyond-paper): dispatch and combine run PER DATA

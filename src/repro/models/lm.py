@@ -31,7 +31,8 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import ssm as S
-from repro.models.common import (Backend, assert_same_structure, mm, ninit,
+from repro.api import Policy
+from repro.models.common import (assert_same_structure, mm, ninit,
                                  rmsnorm, stack_init, stack_specs)
 
 
@@ -270,7 +271,7 @@ def _embed_tokens(params, cfg, tokens, be, prefix_embeds=None):
     return constrain(x, "batch", None, None)
 
 
-def _unembed(params, cfg, x, be: Backend):
+def _unembed(params, cfg, x, be: Policy):
     w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
     return mm(x, w, be)
 
@@ -284,7 +285,7 @@ def _remat(fn, cfg: ModelConfig):
     return jax.checkpoint(fn)
 
 
-def forward_train(params: Dict, cfg: ModelConfig, be: Backend,
+def forward_train(params: Dict, cfg: ModelConfig, be: Policy,
                   tokens: jax.Array,
                   prefix_embeds: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, jax.Array]:
@@ -341,7 +342,7 @@ def _ring_pad(k, W: int, dtype):
     return kr.astype(dtype)
 
 
-def prefill(params: Dict, cfg: ModelConfig, be: Backend, tokens: jax.Array,
+def prefill(params: Dict, cfg: ModelConfig, be: Policy, tokens: jax.Array,
             prefix_embeds: Optional[jax.Array] = None,
             cache_len: Optional[int] = None
             ) -> Tuple[jax.Array, LMCache]:
@@ -426,7 +427,7 @@ def _mamba_prefill(p, h, be, cfg):
     return out, (conv_state, h_final)
 
 
-def decode(params: Dict, cfg: ModelConfig, be: Backend, tokens: jax.Array,
+def decode(params: Dict, cfg: ModelConfig, be: Policy, tokens: jax.Array,
            cache: LMCache) -> Tuple[jax.Array, LMCache]:
     """One-token step. tokens: (B, 1). Returns (logits (B, Vp), cache)."""
     x = _embed_tokens(params, cfg, tokens, be)

@@ -12,7 +12,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, lm
-from repro.models.common import Backend
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,7 +15,8 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ref
-from repro.models.common import Backend, mm, ninit, rmsnorm
+from repro.api import Policy
+from repro.models.common import mm, ninit, rmsnorm
 from repro.parallel.ctx import constrain
 
 
@@ -75,7 +76,7 @@ def _conv_step(conv_state, x_t, w, b):
     return full[:, 1:], y.astype(x_t.dtype)
 
 
-def _project(p, x, cfg: ModelConfig, be: Backend):
+def _project(p, x, cfg: ModelConfig, be: Policy):
     s = cfg.ssm
     di, N, nh = cfg.d_inner, s.d_state, cfg.ssm_heads
     proj = mm(x, p["in_proj"], be)
@@ -84,7 +85,7 @@ def _project(p, x, cfg: ModelConfig, be: Backend):
     return z, xs, Bm, Cm, dt
 
 
-def mamba(p: Dict, x, be: Backend, cfg: ModelConfig,
+def mamba(p: Dict, x, be: Policy, cfg: ModelConfig,
           state: Optional[Tuple] = None):
     """Train/prefill path. x: (B, S, d) -> y (B, S, d).
 

@@ -1,0 +1,90 @@
+"""CLI for the observability layer.
+
+    python -m repro.obs                     # summarize BENCH_*.json files
+    python -m repro.obs show BENCH_x.json   # pretty-print one BENCH file
+    python -m repro.obs diff OLD NEW        # metric deltas between two
+    python -m repro.obs report              # live registry of this process
+
+``diff`` is the per-PR perf-trajectory tool: run a benchmark on main,
+run it on your branch, diff the two BENCH files.  Exits 0 always — the
+numbers are for humans; regression gates belong in the benchmarks
+themselves.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro import obs
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.4g}" if isinstance(v, float) else str(v)
+
+
+def _show(path: pathlib.Path) -> None:
+    doc = obs.load_bench(path)
+    print(f"== {path.name} (bench={doc['bench']}, "
+          f"schema={doc['schema']}) ==")
+    meta = doc.get("meta", {})
+    if meta:
+        print("  meta: " + ", ".join(f"{k}={v}" for k, v in
+                                     sorted(meta.items())))
+    for key, val in sorted(obs._scalar_metrics(doc).items()):
+        print(f"  {key:<52s} {_fmt(val)}")
+    rows = doc.get("router", [])
+    if rows:
+        print(f"  -- router shape histogram ({len(rows)} classes) --")
+        for r in rows[:15]:
+            print(f"  {r['op']:<13s} {r['dtype']}/{r['trans']} "
+                  f"class={r['size_class']:<10s} {r['source']:<10s} "
+                  f"x{r['count']}")
+
+
+def _diff(old: pathlib.Path, new: pathlib.Path) -> None:
+    a, b = obs.load_bench(old), obs.load_bench(new)
+    print(f"== diff {old.name} -> {new.name} ==")
+    print(f"{'metric':<52s} {'old':>12s} {'new':>12s} {'change':>9s}")
+    for key, va, vb, pct in obs.diff_bench(a, b):
+        change = f"{pct:+.1f}%" if pct is not None else "-"
+        print(f"{key:<52s} {_fmt(va):>12s} {_fmt(vb):>12s} {change:>9s}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("cmd", nargs="?", default="list",
+                    choices=["list", "show", "diff", "report"])
+    ap.add_argument("files", nargs="*", help="BENCH_*.json path(s)")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "report":
+        print(obs.report_str())
+        return 0
+    if args.cmd == "show":
+        if len(args.files) != 1:
+            ap.error("show takes exactly one BENCH file")
+        _show(pathlib.Path(args.files[0]))
+        return 0
+    if args.cmd == "diff":
+        if len(args.files) != 2:
+            ap.error("diff takes exactly two BENCH files: OLD NEW")
+        _diff(pathlib.Path(args.files[0]), pathlib.Path(args.files[1]))
+        return 0
+    found = sorted(obs.bench_root().glob("BENCH_*.json"))
+    if not found:
+        print(f"no BENCH_*.json under {obs.bench_root()} — run "
+              f"`python benchmarks/serve_stream.py` to produce one")
+        return 0
+    for p in found:
+        _show(p)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

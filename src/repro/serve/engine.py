@@ -6,17 +6,24 @@ paper's small-GEMM regime.  The engine takes ONE :class:`repro.api.Policy`
 at construction (installed for the whole serving session — not re-entered
 per projection); ``Policy(backend="tuned")`` routes those decode GEMMs
 and the MoE expert FFN by the measured DeviceProfile.
+
+Every request is traced through :mod:`repro.obs`: admission wait, time
+to first token, end-to-end latency (all measured from ``submit``),
+decode throughput per wave, and wave occupancy — the numbers the
+serving-scale ROADMAP items are judged by (``BENCH_serve.json`` via
+``benchmarks/serve_stream.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import api
+from repro import api, obs
 from repro.api import Policy
 from repro.models.registry import Model
 
@@ -49,6 +56,7 @@ class Request:
     prompt: np.ndarray                 # (S,)
     max_new: int = 32
     out: Optional[List[int]] = None
+    t_submit: float = 0.0              # perf_counter stamp set by submit()
 
 
 class ContinuousBatcher:
@@ -75,43 +83,77 @@ class ContinuousBatcher:
             lambda p, t, c: model.decode(p, {"tokens": t}, c, be))
 
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        obs.counter("serve.requests").inc()
         self.queue.append(req)
 
+    def step(self) -> bool:
+        """Admit and run ONE wave from the queue; False when idle.  The
+        streaming benchmark drives this directly so new arrivals can be
+        submitted between waves (Poisson arrivals against a wave-based
+        scheduler — the admission-wait histogram prices that gap)."""
+        if not self.queue:
+            return False
+        wave = [self.queue.pop(0) for _ in range(
+            min(self.slots, len(self.queue)))]
+        self._run_wave(wave)
+        return True
+
     def run(self) -> Dict[int, List[int]]:
-        while self.queue:
-            wave = [self.queue.pop(0) for _ in range(
-                min(self.slots, len(self.queue)))]
-            self._run_wave(wave)
+        while self.step():
+            pass
         return self.done
 
     def _run_wave(self, wave: List[Request]) -> None:
         B = len(wave)
+        t_admit = time.perf_counter()
+        adm = obs.histogram("serve.admission_wait_us")
+        for r in wave:
+            adm.record((t_admit - r.t_submit) * 1e6)
+        obs.histogram("serve.wave_occupancy").record(B / self.slots)
         S = max(len(r.prompt) for r in wave)
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(wave):
             toks[i, S - len(r.prompt):] = r.prompt     # left-pad
         max_new = max(r.max_new for r in wave)
-        logits, cache = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, self.be,
-            cache_len=min(S + max_new, self.max_len))
+        with obs.span("serve.prefill"):
+            logits, cache = self.model.prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.be,
+                cache_len=min(S + max_new, self.max_len))
+            logits = jax.block_until_ready(logits)
         outs = [[] for _ in wave]
         alive = np.ones(B, bool)
         cur = np.asarray(sample(logits, self.key, self.temperature))
+        t_first = time.perf_counter()
+        ttft = obs.histogram("serve.ttft_us")
         for i in range(B):
             outs[i].append(int(cur[i]))
+            ttft.record((t_first - wave[i].t_submit) * 1e6)
         steps = max(r.max_new for r in wave) - 1
-        for _ in range(max(steps, 0)):
-            if not alive.any():
-                break
-            self.key, k = jax.random.split(self.key)
-            logits, cache = self._decode(
-                self.params, jnp.asarray(cur[:, None]), cache)
-            cur = np.asarray(sample(logits, k, self.temperature))
-            for i in range(B):
-                if alive[i]:
-                    tok = int(cur[i])
-                    outs[i].append(tok)
-                    if tok == self.eos or len(outs[i]) >= wave[i].max_new:
-                        alive[i] = False
+        decoded = 0
+        with obs.span("serve.decode"):
+            for _ in range(max(steps, 0)):
+                if not alive.any():
+                    break
+                self.key, k = jax.random.split(self.key)
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(cur[:, None]), cache)
+                cur = np.asarray(sample(logits, k, self.temperature))
+                for i in range(B):
+                    if alive[i]:
+                        tok = int(cur[i])
+                        outs[i].append(tok)
+                        decoded += 1
+                        if tok == self.eos or \
+                                len(outs[i]) >= wave[i].max_new:
+                            alive[i] = False
+        t_done = time.perf_counter()
+        if decoded and t_done > t_first:
+            obs.histogram("serve.decode_tok_s").record(
+                decoded / (t_done - t_first))
+        e2e = obs.histogram("serve.e2e_us")
+        toks_out = obs.counter("serve.tokens")
         for r, o in zip(wave, outs):
             self.done[r.rid] = o
+            e2e.record((t_done - r.t_submit) * 1e6)
+            toks_out.inc(len(o))

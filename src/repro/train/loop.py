@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import ModelConfig
-from repro.models.common import Backend
+from repro import obs
+from repro.api import Policy
 from repro.models.registry import Model
 from repro.train import optimizer as opt
 
@@ -49,7 +49,20 @@ def _xent(logits, labels, vocab: int, z_loss: float):
     return per_tok.sum() / n, n
 
 
-def make_loss_fn(model: Model, tc: TrainConfig, be: Backend) -> Callable:
+def record_step(step: int, metrics: Dict[str, float],
+                dt_s: float) -> None:
+    """Fold one *executed* train step into the obs registry (called by
+    the launcher after the host has blocked on the step's metrics — a
+    jit'd step cannot time itself).  ``BENCH`` exports and
+    ``python -m repro.obs report`` read these."""
+    obs.counter("train.steps").inc()
+    obs.histogram("train.step_us").record(dt_s * 1e6)
+    obs.gauge("train.step").set(step)
+    if "loss" in metrics:
+        obs.gauge("train.loss").set(float(metrics["loss"]))
+
+
+def make_loss_fn(model: Model, tc: TrainConfig, be: Policy) -> Callable:
     cfg = model.cfg
 
     def loss_fn(params, batch):
@@ -91,7 +104,7 @@ def cast_params_for_compute(params, dtype):
     return jax.tree_util.tree_map_with_path(cast, params)
 
 
-def make_train_step(model: Model, tc: TrainConfig, be: Backend) -> Callable:
+def make_train_step(model: Model, tc: TrainConfig, be: Policy) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     With ``accum_steps > 1`` the global batch is split along the batch dim

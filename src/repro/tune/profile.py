@@ -30,6 +30,7 @@ import pathlib
 import threading
 from typing import Dict, Optional
 
+from repro import obs
 from repro.core.kernelgen import KernelSig
 from repro.tune.classes import SizeClass, size_class
 from repro.tune.timer import Measurement
@@ -217,6 +218,9 @@ def set_active_profile(p: Optional[DeviceProfile]) -> None:
     global _active
     with _active_lock:
         _active = p
+    # decisions memoized by the obs route log may have consulted the old
+    # profile — every active-profile transition invalidates them
+    obs.ROUTES.invalidate()
 
 
 def clear_active_profile() -> None:
@@ -225,6 +229,7 @@ def clear_active_profile() -> None:
     global _active
     with _active_lock:
         _active = _UNSET
+    obs.ROUTES.invalidate()
 
 
 def active_profile() -> Optional[DeviceProfile]:
@@ -238,4 +243,5 @@ def active_profile() -> Optional[DeviceProfile]:
                 _active = DeviceProfile.load(path) if path else None
             except (OSError, ValueError, KeyError, json.JSONDecodeError):
                 _active = None
+            obs.ROUTES.invalidate()
         return _active

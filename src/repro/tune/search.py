@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import cost, kernelgen
 from repro.core.kernelgen import KernelSig
 from repro.tune import classes as classes_mod
@@ -121,12 +122,15 @@ def sweep(letters: Sequence[str] = ("S",),
     """Run the tuning sweep and return the (unsaved) DeviceProfile."""
     prof = DeviceProfile(device_kind or current_device_kind(),
                          mode="interpret" if interpret else "compiled")
-    for sc in classes_mod.classes_up_to(letters, trans, max_dim,
-                                        min_dim=min_dim,
-                                        cube_only=cube_only):
-        entry = tune_class(sc, top=top, warmup=warmup, reps=reps,
-                           interpret=interpret)
-        prof.record(sc, entry)
-        if progress is not None:
-            progress(sc, entry)
+    with obs.span("tune.sweep"):
+        for sc in classes_mod.classes_up_to(letters, trans, max_dim,
+                                            min_dim=min_dim,
+                                            cube_only=cube_only):
+            with obs.span("tune.class"):
+                entry = tune_class(sc, top=top, warmup=warmup, reps=reps,
+                                   interpret=interpret)
+            obs.counter("tune.classes_swept").inc()
+            prof.record(sc, entry)
+            if progress is not None:
+                progress(sc, entry)
     return prof

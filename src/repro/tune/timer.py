@@ -18,6 +18,8 @@ from typing import Any, Callable, Optional
 
 import jax
 
+from repro import obs
+
 
 @dataclasses.dataclass(frozen=True)
 class Measurement:
@@ -60,7 +62,15 @@ def measure(fn: Callable[[], Any], *, warmup: int = 1,
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         times.append((time.perf_counter() - t0) * 1e6)
-    return Measurement(_median(times), min(times), max(times), reps)
+    m = Measurement(_median(times), min(times), max(times), reps)
+    # sweep provenance: how many candidates were timed, how long each
+    # took, and how many rankings are trustworthy — exported alongside
+    # the profile so a BENCH file records where its numbers came from
+    obs.counter("tune.measurements").inc()
+    obs.histogram("tune.measure_us").record(m.median_us)
+    if not m.reliable:
+        obs.counter("tune.unreliable").inc()
+    return m
 
 
 def try_measure(fn: Callable[[], Any], *, warmup: int = 1,
@@ -70,4 +80,5 @@ def try_measure(fn: Callable[[], Any], *, warmup: int = 1,
     try:
         return measure(fn, warmup=warmup, reps=reps)
     except Exception:  # noqa: BLE001 — any candidate failure disqualifies it
+        obs.counter("tune.failures").inc()
         return None

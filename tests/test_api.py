@@ -6,7 +6,7 @@ Covers the PR-2 acceptance criteria:
 * DeviceProfile entries demonstrably changing the blocks grouped GEMM
   uses (vs the analytical pick_blocks fallback when no profile exists),
 * the XLA/pallas epilogues agreeing on the output dtype for any c dtype,
-* the deprecation shims forwarding to the Policy.
+* the traditional (pack-step) baseline agreeing with the routed path.
 """
 import dataclasses
 
@@ -360,31 +360,31 @@ def test_xla_and_pallas_epilogue_dtype_agree(c_dtype):
                                atol=1e-4)
 
 
-# -- deprecation shims ------------------------------------------------------
+# -- post-shim surface ------------------------------------------------------
 
-def test_backend_shim_builds_policies():
-    be = common.Backend("pallas", interpret=True, iaat=True)
-    assert isinstance(be, Policy)
-    assert be.pallas and be.iaat and be.backend == "auto"
-    assert common.Backend("pallas", iaat=False).backend == "pallas"
-    assert not common.XLA.iaat and common.XLA.backend == "xla"
-
-
-def test_dispatch_shims_forward():
-    assert dispatch.DispatchConfig is Policy
-    d = dispatch.decide(10, 10, 10, "S", "NN",
-                        dispatch.DispatchConfig(backend="pallas"))
-    assert isinstance(d, Decision) and d.source == "forced"
-    with dispatch.configure(backend="xla"):
-        assert api.current_policy().backend == "xla"
-    a = jnp.ones((4, 8), jnp.float32)
-    b = jnp.ones((8, 4), jnp.float32)
-    np.testing.assert_allclose(
-        np.asarray(dispatch.iaat_gemm(a, b)),
-        np.asarray(a) @ np.asarray(b))
+def test_shims_are_gone():
+    """PR-6 housekeeping: the deprecation shims were removed for real."""
+    from repro.kernels import ops
+    for mod, name in ((dispatch, "DispatchConfig"), (dispatch, "configure"),
+                      (dispatch, "decide"), (dispatch, "iaat_gemm"),
+                      (common, "Backend"), (ops, "gemm_jit")):
+        assert not hasattr(mod, name), f"{mod.__name__}.{name} still exists"
 
 
-def test_mm_shim_uses_ambient_policy():
+def test_traditional_baseline_matches_routed_path():
+    """The surviving dispatch module is the pack-step baseline only, and
+    it agrees numerically with the routed pallas path."""
+    rng = np.random.RandomState(7)
+    a = jnp.asarray(rng.randn(24, 16), jnp.float32)
+    b = jnp.asarray(rng.randn(16, 20), jnp.float32)
+    trad = dispatch.traditional_gemm(a, b, interpret=True)
+    routed = api.gemm(a, b, policy=Policy(backend="pallas", interpret=True))
+    np.testing.assert_allclose(np.asarray(trad), np.asarray(routed),
+                               rtol=2e-5, atol=1e-4)
+    assert dispatch.traditional_pack_bytes(45, 77, 33, jnp.float32) > 0
+
+
+def test_mm_uses_ambient_policy():
     x = jnp.ones((2, 3, 8), jnp.float32)
     w = jnp.ones((8, 4), jnp.float32)
     with api.using(backend="xla", iaat=False):

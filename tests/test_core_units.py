@@ -5,7 +5,8 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests degrade to skip
 from hypothesis import given, settings, strategies as st
 
-from repro.core import dispatch, kernelgen, paper_table, templates, vmem
+from repro import api
+from repro.core import kernelgen, paper_table, templates, vmem
 
 
 def test_contract_all_transpositions():
@@ -61,11 +62,11 @@ def test_armv8_census_hundreds():
 
 
 def test_smallness_criterion_paper_values():
-    with dispatch.configure(paper_thresholds=True):
-        assert dispatch.small_enough(80, 80, 80, "NN")
-        assert not dispatch.small_enough(81, 81, 81, "NN")
-        assert dispatch.small_enough(32, 32, 32, "TN")
-        assert not dispatch.small_enough(33, 33, 33, "TN")
+    with api.using(paper_thresholds=True):
+        assert api.small_enough(80, 80, 80, "NN")
+        assert not api.small_enough(81, 81, 81, "NN")
+        assert api.small_enough(32, 32, 32, "TN")
+        assert not api.small_enough(33, 33, 33, "TN")
 
 
 def test_align_helpers():

@@ -6,6 +6,7 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests degrade to skip
 from hypothesis import given, settings, strategies as st
 
+from repro import api
 from repro.core import dispatch, kernelgen, plan as plan_mod
 from repro.kernels import iaat_gemm, ref
 
@@ -27,9 +28,9 @@ def _run_case(letter, trans, M, N, K, alpha, beta, rng):
     b_shape = (K, N) if trans[1] == "N" else (N, K)
     a, b = _mk(rng, a_shape, letter), _mk(rng, b_shape, letter)
     c = _mk(rng, (M, N), letter) if beta else None
-    with dispatch.configure(backend="pallas", interpret=True):
-        out = dispatch.iaat_gemm(a, b, c, alpha, beta,
-                                 trans[0] == "T", trans[1] == "T")
+    with api.using(backend="pallas", interpret=True):
+        out = api.gemm(a, b, c, alpha, beta,
+                       trans[0] == "T", trans[1] == "T")
     want = ref.ref_gemm(a, b, c, alpha, beta,
                         trans[0] == "T", trans[1] == "T")
     tol = _RTOL[letter]
@@ -86,9 +87,9 @@ def test_dispatch_large_falls_through_to_xla():
     rng = np.random.RandomState(3)
     a = jnp.asarray(rng.randn(600, 600), jnp.float32)
     b = jnp.asarray(rng.randn(600, 600), jnp.float32)
-    with dispatch.configure(backend="auto", interpret=True):
-        assert not dispatch.small_enough(600, 600, 600)
-        out = dispatch.iaat_gemm(a, b)
+    with api.using(backend="auto", interpret=True):
+        assert not api.small_enough(600, 600, 600)
+        out = api.gemm(a, b)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.ref_gemm(a, b)), rtol=2e-5,
                                atol=1e-4)

@@ -1,0 +1,250 @@
+"""repro.obs: registry semantics, histogram accuracy, spans, the Router
+shape log / decision memo, BENCH export, and the kill switch."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import api, obs
+from repro.api import Policy
+from repro.tune import classes, profile as profile_mod
+from repro.tune.profile import DeviceProfile, ProfileEntry
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs.set_enabled(True)
+    obs.reset()
+    yield
+    obs.set_enabled(True)
+    obs.reset()
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_registry_returns_same_object_per_name_and_labels():
+    c1 = obs.counter("t.events", op="gemm")
+    c1.inc()
+    c1.inc(2)
+    assert obs.counter("t.events", op="gemm") is c1
+    assert c1.value == 3
+    # labels are part of the identity, order-insensitively
+    assert obs.counter("t.events", op="matmul") is not c1
+    assert obs.counter("t.x", a=1, b=2) is obs.counter("t.x", b=2, a=1)
+
+
+def test_registry_kind_mismatch_raises():
+    obs.counter("t.kind")
+    with pytest.raises(TypeError):
+        obs.gauge("t.kind")
+
+
+def test_gauge_last_write_wins():
+    g = obs.gauge("t.g")
+    g.set(1.5)
+    g.set(-2)
+    assert g.value == -2.0
+
+
+def test_registry_get_and_collect():
+    assert obs.REGISTRY.get("t.absent") is None
+    obs.counter("t.a").inc()
+    obs.counter("u.b").inc()
+    assert list(obs.REGISTRY.collect("t.")) == ["t.a"]
+    snap = obs.REGISTRY.snapshot()
+    assert snap["t.a"] == {"type": "counter", "value": 1}
+
+
+# -- histogram --------------------------------------------------------------
+
+def test_histogram_percentiles_track_numpy():
+    """Log buckets promise <= sqrt(BASE)-1 ~ 4.4% relative error; check
+    against exact numpy percentiles on a latency-shaped distribution."""
+    rng = np.random.RandomState(42)
+    samples = rng.lognormal(mean=5.0, sigma=1.2, size=2000)
+    h = obs.histogram("t.lat_us")
+    for s in samples:
+        h.record(float(s))
+    assert h.count == 2000
+    np.testing.assert_allclose(h.mean, samples.mean(), rtol=1e-12)
+    for q in (50, 95, 99):
+        exact = np.percentile(samples, q)
+        assert abs(h.percentile(q) - exact) / exact < 0.06, q
+    # extremes are exact, and percentiles clamp inside them
+    assert h.vmin == samples.min() and h.vmax == samples.max()
+    assert h.percentile(100) <= samples.max()
+
+
+def test_histogram_zero_and_negative_bucket():
+    h = obs.histogram("t.z")
+    h.record(0.0)
+    h.record(-3.0)
+    h.record(10.0)
+    assert h.count == 3 and h.zeros == 2
+    assert h.percentile(50) == 0.0       # rank 2 of 3 is still a zero
+    assert abs(h.p99 - 10.0) / 10.0 < 0.045   # bucket midpoint resolution
+
+
+def test_histogram_empty():
+    h = obs.histogram("t.empty")
+    assert h.count == 0 and h.mean == 0.0 and h.p50 == 0.0
+    assert h.to_json()["min"] == 0.0
+
+
+# -- spans ------------------------------------------------------------------
+
+def test_span_nesting_builds_dotted_paths():
+    with obs.span("outer"):
+        with obs.span("inner"):
+            pass
+        with obs.span("inner"):
+            pass
+    with obs.span("outer"):
+        pass
+    outer = obs.REGISTRY.get("span.outer_us")
+    inner = obs.REGISTRY.get("span.outer.inner_us")
+    assert outer.count == 2
+    assert inner.count == 2
+    assert obs.REGISTRY.get("span.inner_us") is None
+
+
+def test_span_records_elapsed_time():
+    import time
+    with obs.span("t.sleep"):
+        time.sleep(0.01)
+    h = obs.REGISTRY.get("span.t.sleep_us")
+    assert h.count == 1 and h.vmin >= 9e3
+
+
+# -- the Router shape log / decision memo -----------------------------------
+
+def _route_batch(pol):
+    r = api.Router(pol)
+    for _ in range(3):
+        r.route("matmul", (2, 8, 16, 32), "S", "NN")
+    r.route("gemm", (45, 77, 33), "S", "NN")
+    r.route("gemm", (45, 77, 33), "S", "NN")
+    r.route("batched_gemm", (4, 16, 32, 64), "S", "NN")
+    return r
+
+
+def test_route_log_shape_counts():
+    """The acceptance query: counts per (op, dtype, size-class)."""
+    _route_batch(Policy(backend="auto"))
+    counts = obs.ROUTES.shape_counts()
+    assert sum(counts.values()) == 6
+    b = classes.bucket_index
+    assert counts[("matmul", "S", f"{b(16)}-{b(32)}-{b(16)}")] == 3
+    assert counts[("gemm", "S", f"{b(45)}-{b(77)}-{b(33)}")] == 2
+    assert counts[("batched_gemm", "S", f"{b(16)}-{b(64)}-{b(32)}")] == 1
+    # full-label histogram carries the decision downstream tuning needs
+    for (_op, _dt, _tr, _cls, _pallas, source, _blocks), n \
+            in obs.ROUTES.histogram().items():
+        assert source in ("forced", "profile", "analytical") and n >= 1
+
+
+def test_route_memo_returns_cached_decision():
+    pol = Policy(backend="auto")
+    r = api.Router(pol)
+    d1 = r.route("gemm", (45, 77, 33), "S", "NN")
+    d2 = r.route("gemm", (45, 77, 33), "S", "NN")
+    assert d2 is d1                      # memo hit, not a recompute
+    # a different Policy object (even equal) must not alias the memo
+    d3 = api.Router(Policy(backend="auto")).route(
+        "gemm", (45, 77, 33), "S", "NN")
+    assert d3 is not d1 and d3 == d1
+
+
+def test_route_memo_invalidated_by_profile_change(tmp_path, monkeypatch):
+    monkeypatch.setenv(profile_mod.CACHE_ENV, str(tmp_path / "cache"))
+    profile_mod.clear_active_profile()
+    pol = Policy(backend="tuned")
+    r = api.Router(pol)
+    d1 = r.route("gemm", (45, 45, 45), "S", "NN")
+    assert d1.source == "analytical"     # no profile yet
+    prof = DeviceProfile(profile_mod.current_device_kind())
+    from repro.tune.timer import Measurement
+    m = lambda us: Measurement(us, us, us, 3)  # noqa: E731
+    prof.record(classes.size_class(45, 45, 45, "S", "NN"),
+                ProfileEntry(None, m(100.0), m(1.0)))
+    profile_mod.set_active_profile(prof)     # bumps ROUTES.gen
+    d2 = r.route("gemm", (45, 45, 45), "S", "NN")
+    assert d2.source == "profile" and not d2.use_pallas
+    profile_mod.clear_active_profile()
+    d3 = r.route("gemm", (45, 45, 45), "S", "NN")
+    assert d3.source == "analytical"
+
+
+def test_route_log_compaction_preserves_counts():
+    rl = obs.ROUTES
+    old_cap = rl.CAP
+    rl.CAP = 4
+    try:
+        r = api.Router(Policy(backend="auto"))
+        for m in range(8, 20):           # 12 distinct shapes > CAP
+            r.route("gemm", (m, m, m), "S", "NN")
+        assert rl.total == 12            # nothing lost across compactions
+        assert len(rl.hits) <= 4
+    finally:
+        rl.CAP = old_cap
+
+
+# -- BENCH export -----------------------------------------------------------
+
+def test_export_load_diff_roundtrip(tmp_path):
+    obs.counter("t.reqs").inc(10)
+    obs.histogram("t.lat_us").record(100.0)
+    _route_batch(Policy(backend="auto"))
+    p1 = obs.export_bench("t1", {"note": "a"}, root=tmp_path)
+    assert p1.name == "BENCH_t1.json"
+    doc = obs.load_bench(p1)
+    assert doc["schema"] == obs.BENCH_SCHEMA_VERSION
+    assert doc["meta"] == {"note": "a"}
+    assert doc["metrics"]["t.reqs"]["value"] == 10
+    assert sum(r["count"] for r in doc["router"]) == 6
+    # second run with more traffic diffs cleanly
+    obs.counter("t.reqs").inc(10)
+    p2 = obs.export_bench("t2", root=tmp_path)
+    rows = {r[0]: r for r in obs.diff_bench(doc, obs.load_bench(p2))}
+    _, old, new, pct = rows["t.reqs"]
+    assert (old, new) == (10.0, 20.0) and pct == 100.0
+
+
+def test_load_bench_rejects_wrong_schema(tmp_path):
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text(json.dumps({"bench": "bad", "schema": 999}))
+    with pytest.raises(ValueError):
+        obs.load_bench(bad)
+
+
+# -- kill switch ------------------------------------------------------------
+
+def test_env_parse_only_explicit_off_disables():
+    for off in ("0", "false", "OFF", " no "):
+        assert not obs._env_enabled(off)
+    for on in (None, "", "1", "true", "yes", "anything"):
+        assert obs._env_enabled(on)
+
+
+def test_disabled_is_noop_everywhere():
+    obs.set_enabled(False)
+    c = obs.counter("t.dead")
+    c.inc(5)
+    assert c.value == 0                  # shared null object
+    obs.gauge("t.dead_g").set(3)
+    obs.histogram("t.dead_h").record(1.0)
+    with obs.span("t.dead_span"):
+        pass
+    _route_batch(Policy(backend="auto"))
+    assert obs.ROUTES.total == 0
+    obs.set_enabled(True)
+    assert obs.REGISTRY.snapshot() == {} # nothing leaked into the registry
+    assert obs.REGISTRY.get("span.t.dead_span_us") is None
+
+
+def test_disabled_routing_still_correct():
+    obs.set_enabled(False)
+    d = api.Router(Policy(backend="auto")).route(
+        "gemm", (45, 77, 33), "S", "NN")
+    assert d.source in ("forced", "analytical")
+    assert isinstance(d.use_pallas, bool)

@@ -1,8 +1,8 @@
 """End-to-end behaviour tests for the paper's system.
 
 Covers the full IAAT pipeline (install-time table -> run-time plan ->
-kernel execution plan -> dispatch) and its integration into the model
-stack (Backend(iaat=True) routes model matmuls through the paper's path).
+kernel execution plan -> routing) and its integration into the model
+stack (a pallas Policy routes model matmuls through the paper's path).
 """
 import jax
 import jax.numpy as jnp
@@ -10,10 +10,11 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core import dispatch, kernelgen, plan as plan_mod
+from repro import api
+from repro.core import kernelgen, plan as plan_mod
 from repro.kernels import ref
 from repro.models import registry
-from repro.models.common import XLA, Backend
+from repro.models.common import PALLAS_INTERPRET, XLA
 
 KEY = jax.random.PRNGKey(0)
 
@@ -53,8 +54,8 @@ def test_iaat_gemm_under_jit():
 
     @jax.jit
     def f(a, b):
-        with dispatch.configure(backend="pallas", interpret=True):
-            return dispatch.iaat_gemm(a, b)
+        with api.using(backend="pallas", interpret=True):
+            return api.gemm(a, b)
 
     np.testing.assert_allclose(np.asarray(f(a, b)),
                                np.asarray(a) @ np.asarray(b),
@@ -68,8 +69,8 @@ def test_iaat_gemm_differentiable():
     b = jnp.asarray(rng.randn(24, 32), jnp.float32)
 
     def loss(a, b):
-        with dispatch.configure(backend="pallas", interpret=True):
-            return jnp.sum(dispatch.iaat_gemm(a, b) ** 2)
+        with api.using(backend="pallas", interpret=True):
+            return jnp.sum(api.gemm(a, b) ** 2)
 
     ga = jax.grad(loss)(a, b)
     ga_ref = jax.grad(lambda a, b: jnp.sum((a @ b) ** 2))(a, b)
@@ -86,8 +87,8 @@ def test_model_forward_through_iaat_backend():
     params = model.init(KEY)
     tok = jax.random.randint(KEY, (1, 16), 0, cfg.vocab)
     l_xla, _ = model.forward_train(params, {"tokens": tok}, XLA)
-    be = Backend("pallas", interpret=True, iaat=True)
-    l_iaat, _ = model.forward_train(params, {"tokens": tok}, be)
+    l_iaat, _ = model.forward_train(params, {"tokens": tok},
+                                    PALLAS_INTERPRET)
     scale = float(jnp.abs(l_xla).max())
     assert float(jnp.abs(l_xla - l_iaat).max()) / scale < 5e-3
 
@@ -101,19 +102,19 @@ def test_moe_through_pallas_batched_gemm():
     params = model.init(KEY)
     tok = jax.random.randint(KEY, (1, 16), 0, cfg.vocab)
     l_xla, _ = model.forward_train(params, {"tokens": tok}, XLA)
-    be = Backend("pallas", interpret=True, iaat=False)
+    be = PALLAS_INTERPRET.replace(backend="pallas", iaat=False)
     l_pl, _ = model.forward_train(params, {"tokens": tok}, be)
     scale = float(jnp.abs(l_xla).max())
     assert float(jnp.abs(l_xla - l_pl).max()) / scale < 5e-3
 
 
 def test_dispatch_thresholds_route_correctly():
-    with dispatch.configure(paper_thresholds=True):
-        cfg = dispatch.config()
+    with api.using(paper_thresholds=True):
+        cfg = api.current_policy()
         assert cfg.threshold("NN") == 80
         assert cfg.threshold("TN") == 32
-    cfg = dispatch.config()
-    assert cfg.threshold("NN") == 80 * dispatch.TPU_SCALE
+    cfg = api.current_policy()
+    assert cfg.threshold("NN") == 80 * api.TPU_SCALE
 
 
 def test_all_cells_enumerated():

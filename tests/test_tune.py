@@ -1,11 +1,12 @@
-"""repro.tune: bucketing, profile persistence, tuned-mode dispatch."""
+"""repro.tune: bucketing, profile persistence, tuned-mode routing."""
 import json
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import dispatch, plan as plan_mod
+from repro import api
+from repro.core import plan as plan_mod
 from repro.core.kernelgen import KernelSig
 from repro.tune import classes, profile as profile_mod, search
 from repro.tune.classes import SizeClass
@@ -148,8 +149,8 @@ def test_unmeasured_entry_falls_back_analytical():
     prof = DeviceProfile(profile_mod.current_device_kind())
     prof.record(sc, ProfileEntry(None, None, None))   # sweep all-failed
     profile_mod.set_active_profile(prof)
-    d = dispatch.decide(45, 45, 45, "S", "NN",
-                        dispatch.DispatchConfig(backend="tuned"))
+    d = api.route("gemm", (45, 45, 45), "S", "NN",
+                  policy=api.Policy(backend="tuned"))
     assert d.source == "analytical"
 
 
@@ -171,15 +172,15 @@ def _gemm_operands(M, N, K, seed=0):
 
 def test_tuned_mode_falls_back_analytical_without_profile():
     assert profile_mod.active_profile() is None
-    cfg = dispatch.DispatchConfig(backend="tuned")
-    d = dispatch.decide(10, 10, 10, "S", "NN", cfg)
+    cfg = api.Policy(backend="tuned")
+    d = api.route("gemm", (10, 10, 10), "S", "NN", policy=cfg)
     assert d.source == "analytical"
-    auto = dispatch.decide(10, 10, 10, "S", "NN",
-                           dispatch.DispatchConfig(backend="auto"))
+    auto = api.route("gemm", (10, 10, 10), "S", "NN",
+                     policy=api.Policy(backend="auto"))
     assert d.use_pallas == auto.use_pallas
     a, b = _gemm_operands(10, 10, 10)
-    with dispatch.configure(backend="tuned"):
-        out = dispatch.iaat_gemm(a, b)
+    with api.using(backend="tuned"):
+        out = api.gemm(a, b)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(a) @ np.asarray(b), rtol=2e-5)
 
@@ -189,20 +190,20 @@ def test_tuned_mode_reads_profile():
     M = N = K = 45
     sc = classes.size_class(M, N, K, "S", "NN")
     # analytical auto-mode would choose pallas for this small problem...
-    assert dispatch.decide(M, N, K, "S", "NN",
-                           dispatch.DispatchConfig(backend="auto")).use_pallas
+    assert api.route("gemm", (M, N, K), "S", "NN",
+                     policy=api.Policy(backend="auto")).use_pallas
     # ...but the measured profile says XLA wins this class.
     prof = DeviceProfile(profile_mod.current_device_kind())
     prof.record(sc, _entry(100.0, 1.0))
     prof.save()                            # default (env-cache) path
     profile_mod.clear_active_profile()     # force the lazy disk load
-    cfg = dispatch.DispatchConfig(backend="tuned")
-    d = dispatch.decide(M, N, K, "S", "NN", cfg)
+    cfg = api.Policy(backend="tuned")
+    d = api.route("gemm", (M, N, K), "S", "NN", policy=cfg)
     assert d.source == "profile"
     assert not d.use_pallas
     a, b = _gemm_operands(M, N, K)
-    with dispatch.configure(backend="tuned"):
-        out = dispatch.iaat_gemm(a, b)
+    with api.using(backend="tuned"):
+        out = api.gemm(a, b)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(a) @ np.asarray(b), rtol=2e-5)
 
@@ -214,16 +215,16 @@ def test_tuned_mode_kernel_override_used():
     prof = DeviceProfile(profile_mod.current_device_kind())
     prof.record(sc, _entry(1.0, 100.0, sig=sig))
     profile_mod.set_active_profile(prof)
-    cfg = dispatch.DispatchConfig(backend="tuned")
-    d = dispatch.decide(M, N, K, "S", "NN", cfg)
+    cfg = api.Policy(backend="tuned")
+    d = api.route("gemm", (M, N, K), "S", "NN", policy=cfg)
     assert d.source == "profile" and d.use_pallas and d.sig == sig
     p = plan_mod.build_plan(M, N, K, "S", "NN", cfg.method, override=d.sig)
     assert p.num_kernel_calls == 1
     assert p.regions[0].sig == sig
     p.tiling.validate_cover()
     a, b = _gemm_operands(M, N, K)
-    with dispatch.configure(backend="tuned"):
-        out = dispatch.iaat_gemm(a, b)
+    with api.using(backend="tuned"):
+        out = api.gemm(a, b)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(a) @ np.asarray(b),
                                rtol=2e-5, atol=2e-4)
@@ -235,11 +236,11 @@ def test_analytical_paths_unchanged_by_profile():
     sc = classes.size_class(10, 10, 10, "S", "NN")
     prof.record(sc, _entry(100.0, 1.0))    # profile says xla
     profile_mod.set_active_profile(prof)
-    assert dispatch.decide(10, 10, 10, "S", "NN",
-                           dispatch.DispatchConfig(backend="auto")).use_pallas
-    assert dispatch.decide(
-        10, 10, 10, "S", "NN",
-        dispatch.DispatchConfig(backend="pallas")).source == "forced"
+    assert api.route("gemm", (10, 10, 10), "S", "NN",
+                     policy=api.Policy(backend="auto")).use_pallas
+    assert api.route(
+        "gemm", (10, 10, 10), "S", "NN",
+        policy=api.Policy(backend="pallas")).source == "forced"
 
 
 def test_install_tune_writes_and_activates_profile():
