@@ -1,5 +1,7 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # Exits nonzero when any suite reports an ERROR row (CI regression gate).
+# ``--record`` additionally appends the serving headline numbers to the
+# BENCH_serve.json trajectory (the per-PR perf history).
 from __future__ import annotations
 
 import os
@@ -19,6 +21,7 @@ def main() -> None:
     from benchmarks import (gemm_sweep, kernel_table, pack_cost, roofline,
                             route_overhead, serve_stream, tiling_memops,
                             tune_report)
+    record = "--record" in sys.argv[1:]
     suites = [
         ("tiling_memops", tiling_memops.run),   # paper Fig. 2
         ("pack_cost", pack_cost.run),           # paper Fig. 3
@@ -27,7 +30,10 @@ def main() -> None:
         ("roofline", roofline.run),             # framework deliverable (g)
         ("tune_report", tune_report.run),       # empirical vs analytical
         ("route_overhead", route_overhead.run),  # obs <5% gate
-        ("serve_stream", serve_stream.run),     # Poisson serving stream
+        # Poisson serving stream, both engines; --record appends the
+        # per-PR trajectory row
+        ("serve_stream",
+         lambda rows: serve_stream.run(rows, record=record)),
     ]
     if "--quick" in sys.argv[1:]:
         quick = {"tiling_memops", "kernel_table", "roofline", "tune_report",

@@ -1,17 +1,22 @@
-"""Streaming serving benchmark: Poisson arrivals against the wave-based
-continuous batcher (the paper's decode-time small-GEMM regime under a
-realistic open-loop load).
+"""Streaming serving benchmark: Poisson arrivals against both serving
+engines (the paper's decode-time small-GEMM regime under a realistic
+open-loop load).
 
 Requests arrive by a seeded exponential inter-arrival process and are
-submitted to :class:`repro.serve.engine.ContinuousBatcher` at their
-arrival times; the engine's own :mod:`repro.obs` instrumentation then
-prices everything we report — time-to-first-token, end-to-end latency
-(p50/p99), decode throughput, and wave occupancy.  ``main()`` exports
-the numbers as ``BENCH_serve.json`` (the repo's first checked-in
-observability baseline); ``run()`` folds the headline rows into the
-``benchmarks/run.py`` CSV.
+submitted at their arrival times to either the paged slot-level engine
+(:class:`repro.serve.PagedEngine`, the default) or the wave-based
+reference (:class:`repro.serve.ContinuousBatcher`); the engines' own
+:mod:`repro.obs` instrumentation then prices everything we report —
+time-to-first-token, end-to-end latency (p50/p99), admission wait,
+decode throughput, slot/wave occupancy.  ``main()`` exports the numbers
+as ``BENCH_serve.json`` with a per-engine summary in ``meta`` so one
+file records the paged-vs-wave comparison; ``--gate`` fails the run when
+paged p99 end-to-end latency regresses >20% against the checked-in
+baseline, and ``--record`` appends a trajectory row (the per-PR history
+``benchmarks/run.py --record`` maintains).
 
     PYTHONPATH=src python benchmarks/serve_stream.py --requests 16
+    PYTHONPATH=src python benchmarks/serve_stream.py --engine both --gate
 """
 from __future__ import annotations
 
@@ -25,31 +30,45 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
+GATE_PCT = 20.0     # p99 e2e regression tolerance vs checked-in baseline
+
+
+def _build_engine(engine, model, params, *, slots, seed):
+    from repro.serve import ContinuousBatcher, PagedEngine
+    if engine == "paged":
+        return PagedEngine(model, params, slots=slots, max_len=128,
+                           temperature=0.8, seed=seed, block_size=16,
+                           chunk=16)
+    return ContinuousBatcher(model, params, slots=slots, max_len=128,
+                             temperature=0.8, seed=seed)
+
 
 def stream(n_requests: int = 16, rate_hz: float = 4.0, *, slots: int = 4,
            max_new: int = 8, prompt_lo: int = 4, prompt_hi: int = 16,
            model_name: str = "glm4-9b", policy: str = "xla",
-           seed: int = 0):
+           seed: int = 0, engine: str = "paged"):
     """Run the open-loop stream; returns (meta, wall_s, tokens).
 
     Arrival times are drawn up front (seeded, reproducible); the loop
-    submits every request whose arrival time has passed, runs one wave,
-    and otherwise sleeps until the next arrival — so admission wait
-    honestly includes the wave the scheduler was busy with.
+    submits every request whose arrival time has passed, runs one engine
+    step (a wave for the reference engine, one decode iteration for the
+    paged engine), and otherwise sleeps until the next arrival — so
+    admission wait honestly includes whatever the scheduler was busy
+    with.  The same seed drives both engines, so a ``--engine both``
+    comparison sees an identical arrival process and workload.
     """
     import jax
     import numpy as np
 
     from repro import api, configs, obs
-    from repro.models.registry import build
-    from repro.serve.engine import ContinuousBatcher, Request
+    from repro.serve import Request
 
     cfg = configs.get_smoke(model_name)
+    from repro.models.registry import build
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     api.install(api.named_policy(policy))
-    batcher = ContinuousBatcher(model, params, slots=slots, max_len=128,
-                                temperature=0.8, seed=seed)
+    srv = _build_engine(engine, model, params, slots=slots, seed=seed)
 
     rng = np.random.RandomState(seed)
     gaps = rng.exponential(1.0 / rate_hz, size=n_requests)
@@ -58,54 +77,127 @@ def stream(n_requests: int = 16, rate_hz: float = 4.0, *, slots: int = 4,
                for _ in range(n_requests)]
     arrivals = np.cumsum(gaps)
 
-    # warm the jit caches off the clock: one throwaway wave end-to-end.
-    batcher.submit(Request(-1, prompts[0], max_new=2))
-    batcher.run()
+    # warm the jit caches off the clock: one throwaway request end-to-end
+    # (dropped from ``done`` so the stream serves all n_requests and the
+    # token/latency counts don't include it).
+    srv.submit(Request(-1, prompts[0], max_new=2))
+    srv.run()
+    srv.done.clear()
     obs.reset()
 
     t0 = time.perf_counter()
     nxt = 0
-    while len(batcher.done) < n_requests:
+    while len(srv.done) < n_requests:
         now = time.perf_counter() - t0
         while nxt < n_requests and arrivals[nxt] <= now:
-            batcher.submit(Request(nxt, prompts[nxt], max_new=max_new))
+            srv.submit(Request(nxt, prompts[nxt], max_new=max_new))
             nxt += 1
-        if not batcher.step() and nxt < n_requests:
+        if not srv.step() and nxt < n_requests:
             time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
     wall = time.perf_counter() - t0
-    tokens = sum(len(v) for v in batcher.done.values())
+    tokens = sum(len(v) for v in srv.done.values())
     meta = {
-        "model": model_name, "policy": policy, "slots": slots,
-        "requests": n_requests, "rate_hz": rate_hz, "max_new": max_new,
-        "seed": seed, "wall_s": round(wall, 3), "tokens": tokens,
-        "tokens_per_s": round(tokens / wall, 2),
+        "engine": engine, "model": model_name, "policy": policy,
+        "slots": slots, "requests": n_requests, "rate_hz": rate_hz,
+        "max_new": max_new, "seed": seed, "wall_s": round(wall, 3),
+        "tokens": tokens, "tokens_per_s": round(tokens / wall, 2),
     }
     return meta, wall, tokens
 
 
-def _headline(meta):
+def _summary(meta):
+    """Fold the live registry into one comparable per-engine dict."""
+    from repro import obs
+    out = {"tokens_per_s": meta["tokens_per_s"], "tokens": meta["tokens"],
+           "wall_s": meta["wall_s"]}
+    for short, metric in (("ttft", "serve.ttft_us"),
+                          ("e2e", "serve.e2e_us"),
+                          ("admission_wait", "serve.admission_wait_us")):
+        h = obs.REGISTRY.get(metric)
+        if h is not None and h.n:
+            out[f"{short}_p50_us"] = round(h.p50, 1)
+            out[f"{short}_p99_us"] = round(h.p99, 1)
+    pre = obs.REGISTRY.get("serve.preemptions")
+    if pre is not None:
+        out["preemptions"] = pre.value
+    return out
+
+
+def _headline(meta, prefix="serve_stream"):
     from repro import obs
     e2e = obs.REGISTRY.get("serve.e2e_us")
     ttft = obs.REGISTRY.get("serve.ttft_us")
-    rows = [("serve_stream/tokens_per_s", meta["tokens_per_s"],
+    rows = [(f"{prefix}/tokens_per_s", meta["tokens_per_s"],
              meta["tokens"])]
     if e2e is not None and e2e.n:
-        rows += [("serve_stream/e2e_p50_us", round(e2e.p50, 1), e2e.n),
-                 ("serve_stream/e2e_p99_us", round(e2e.p99, 1), e2e.n)]
+        rows += [(f"{prefix}/e2e_p50_us", round(e2e.p50, 1), e2e.n),
+                 (f"{prefix}/e2e_p99_us", round(e2e.p99, 1), e2e.n)]
     if ttft is not None and ttft.n:
-        rows += [("serve_stream/ttft_p50_us", round(ttft.p50, 1), ttft.n)]
+        rows += [(f"{prefix}/ttft_p50_us", round(ttft.p50, 1), ttft.n)]
     return rows
 
 
-def run(csv_rows) -> None:
-    """benchmarks/run.py entry: a small stream, headline rows only."""
-    meta, _, _ = stream(n_requests=8, rate_hz=4.0, max_new=4)
-    csv_rows.extend(_headline(meta))
+def bench(engines, **kw):
+    """Run the stream per engine (fresh metrics each) and return
+    ``(meta, rows)`` where ``meta['engines'][name]`` holds each engine's
+    summary and the live registry holds the LAST engine's metrics (the
+    snapshot ``export_bench`` writes — paged last, so the checked-in
+    metrics block tracks the default engine)."""
+    from repro import obs
+    meta, rows = {}, []
+    for engine in engines:
+        obs.reset()
+        m, _, _ = stream(engine=engine, **kw)
+        meta.setdefault("engines", {})[engine] = _summary(m)
+        rows.extend(_headline(m, prefix=f"serve_stream[{engine}]"))
+        meta.update({k: v for k, v in m.items()
+                     if k not in ("engine", "wall_s", "tokens",
+                                  "tokens_per_s")})
+    return meta, rows
+
+
+def baseline_p99(doc) -> float:
+    """Paged p99 e2e from a BENCH_serve doc (older docs fall back to the
+    top-level metric, which then priced the wave engine)."""
+    eng = doc.get("meta", {}).get("engines", {})
+    p99 = eng.get("paged", {}).get("e2e_p99_us")
+    if p99 is None:
+        p99 = doc.get("metrics", {}).get("serve.e2e_us", {}).get("p99")
+    return float(p99) if p99 else 0.0
+
+
+def check_gate(baseline_doc, new_p99: float):
+    """Returns (ok, message) for the p99-e2e regression gate."""
+    old = baseline_p99(baseline_doc)
+    if not old:
+        return True, "gate: no baseline p99 — skipped"
+    pct = (new_p99 - old) / old * 100.0
+    ok = pct <= GATE_PCT
+    return ok, (f"gate: paged e2e p99 {new_p99:.0f}us vs baseline "
+                f"{old:.0f}us ({pct:+.1f}%, limit +{GATE_PCT:.0f}%)")
+
+
+def run(csv_rows, record: bool = False) -> None:
+    """benchmarks/run.py entry: a small stream per engine, headline rows
+    only; ``--record`` additionally appends the per-PR trajectory row."""
+    from repro import obs
+    meta, rows = bench(("wave", "paged"), n_requests=8, rate_hz=4.0,
+                       max_new=4)
+    csv_rows.extend(rows)
+    if record:
+        obs.record_trajectory("serve", {"engines": meta["engines"],
+                                        "requests": meta["requests"],
+                                        "rate_hz": meta["rate_hz"]})
 
 
 def main() -> None:
+    import json
+    import pathlib
+
     from repro import obs
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--engine", default="both",
+                    choices=("paged", "wave", "both"))
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate-hz", type=float, default=4.0)
     ap.add_argument("--slots", type=int, default=4)
@@ -114,19 +206,64 @@ def main() -> None:
     ap.add_argument("--policy", default="xla",
                     choices=("xla", "pallas", "auto", "tuned"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gate", action="store_true",
+                    help=f"fail when paged e2e p99 regresses more than "
+                         f"{GATE_PCT:.0f}%% vs the checked-in "
+                         f"BENCH_serve.json")
+    ap.add_argument("--record", action="store_true",
+                    help="append a per-PR trajectory row to "
+                         "BENCH_serve.json")
     ap.add_argument("--no-export", action="store_true",
                     help="print the report without writing BENCH_serve.json")
     args = ap.parse_args()
-    meta, wall, tokens = stream(
-        args.requests, args.rate_hz, slots=args.slots, max_new=args.max_new,
-        model_name=args.model, policy=args.policy, seed=args.seed)
-    for name, val, n in _headline(meta):
+
+    # snapshot the checked-in baseline BEFORE the export overwrites it
+    bench_path = obs.bench_root() / "BENCH_serve.json"
+    baseline = None
+    if args.gate and bench_path.exists():
+        baseline = json.loads(pathlib.Path(bench_path).read_text())
+
+    engines = ("wave", "paged") if args.engine == "both" else (args.engine,)
+    meta, rows = bench(engines, n_requests=args.requests,
+                       rate_hz=args.rate_hz, slots=args.slots,
+                       max_new=args.max_new, model_name=args.model,
+                       policy=args.policy, seed=args.seed)
+    for name, val, n in rows:
         print(f"{name}: {val}  (n={n})")
-    print(f"{meta['requests']} requests in {wall:.2f}s "
-          f"-> {meta['tokens_per_s']} tok/s")
+    for engine, s in meta["engines"].items():
+        print(f"[{engine}] {s['tokens']} tokens in {s['wall_s']}s "
+              f"-> {s['tokens_per_s']} tok/s")
+
     if not args.no_export:
         path = obs.export_bench("serve", meta)
         print(f"wrote {path}")
+    if args.record:
+        obs.record_trajectory("serve", {"engines": meta["engines"],
+                                        "requests": args.requests,
+                                        "rate_hz": args.rate_hz})
+        print("appended trajectory row")
+
+    failed = False
+    if args.gate and "paged" in meta["engines"]:
+        ok, msg = check_gate(baseline or {},
+                             meta["engines"]["paged"].get("e2e_p99_us", 0.0))
+        # over a short open-loop stream p99 is nearly a max statistic —
+        # one host hiccup doubles it — so re-measure before failing; a
+        # real capability regression fails every repeat.
+        retries = 0
+        while not ok and retries < 2:
+            retries += 1
+            obs.reset()
+            m, _, _ = stream(engine="paged", n_requests=args.requests,
+                             rate_hz=args.rate_hz, slots=args.slots,
+                             max_new=args.max_new, model_name=args.model,
+                             policy=args.policy, seed=args.seed)
+            ok, msg = check_gate(baseline or {},
+                                 _summary(m).get("e2e_p99_us", 0.0))
+        print(msg + (f" [retries: {retries}]" if retries else ""))
+        failed = not ok
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

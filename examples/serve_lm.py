@@ -11,7 +11,7 @@ import numpy as np
 
 from repro import api, configs, obs
 from repro.models.registry import build
-from repro.serve.engine import ContinuousBatcher, Request
+from repro.serve import PagedEngine, Request
 
 logging.basicConfig(level=logging.INFO)
 
@@ -19,12 +19,14 @@ cfg = configs.get_smoke("glm4-9b")
 model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
-# one Policy installed at model entry; the batcher snapshots it (swap in
+# one Policy installed at model entry; the engine snapshots it (swap in
 # named_policy("tuned") after `python -m repro.tune` to serve off the
-# measured DeviceProfile)
+# measured DeviceProfile).  PagedEngine is the default serving path —
+# paged KV blocks + slot-level scheduling; swap in ContinuousBatcher
+# for the wave-based reference (or an SSM/hybrid backbone).
 api.install(api.named_policy("xla"))
-batcher = ContinuousBatcher(model, params, slots=4, max_len=128,
-                            temperature=0.8, seed=0)
+batcher = PagedEngine(model, params, slots=4, max_len=128,
+                      temperature=0.8, seed=0, block_size=16)
 rng = np.random.RandomState(0)
 t0 = time.time()
 for rid in range(10):
@@ -38,5 +40,6 @@ for rid in sorted(done)[:3]:
 print(f"{len(done)} requests, {tokens} tokens, {tokens / dt:.1f} tok/s")
 
 # everything above was traced through repro.obs — dump the metrics the
-# engine recorded (ttft/e2e percentiles, wave occupancy, decode rate)
+# engine recorded (ttft/e2e percentiles, slot occupancy, queue depth,
+# blocks in use, preemptions)
 print(obs.report_str())

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
         --requests 8 --max-new 16
+
+``--engine auto`` (default) serves with the paged slot-level engine
+whenever the family supports the block pool, falling back to the
+wave-based reference for SSM/hybrid backbones.
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import numpy as np
 
 from repro import api, configs
 from repro.models.registry import build as build_model
-from repro.serve.engine import ContinuousBatcher, Request
+from repro.serve import ContinuousBatcher, PagedEngine, Request
 
 log = logging.getLogger("repro.serve")
 
@@ -24,9 +28,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "paged", "wave"))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--backend", default="xla",
                     choices=list(api.POLICY_NAMES))
@@ -38,13 +45,27 @@ def main() -> None:
     if cfg.family in ("encdec", "audio"):
         raise SystemExit("use a decoder-only arch for the serve demo")
     model = build_model(cfg)
-    # model-entry policy install: the batcher snapshots the ambient policy
+    engine = args.engine
+    if engine == "auto":
+        engine = "paged" if model.paged_step is not None else "wave"
+    elif engine == "paged" and model.paged_step is None:
+        raise SystemExit(f"--engine paged: family {cfg.family!r} needs "
+                         f"recurrent state the block pool doesn't carry; "
+                         f"use --engine wave")
+    # model-entry policy install: the engine snapshots the ambient policy
     be = api.install(api.named_policy(args.backend, interpret=True))
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.RandomState(args.seed)
-    batcher = ContinuousBatcher(model, params, be, slots=args.slots,
-                                max_len=256, temperature=args.temperature,
-                                seed=args.seed)
+    if engine == "paged":
+        batcher = PagedEngine(model, params, be, slots=args.slots,
+                              max_len=256, temperature=args.temperature,
+                              seed=args.seed, block_size=args.block_size)
+    else:
+        batcher = ContinuousBatcher(model, params, be, slots=args.slots,
+                                    max_len=256,
+                                    temperature=args.temperature,
+                                    seed=args.seed)
+    log.info("engine=%s arch=%s slots=%d", engine, args.arch, args.slots)
     t0 = time.time()
     for rid in range(args.requests):
         plen = int(rng.randint(4, 24))

@@ -108,16 +108,79 @@ def decode_attend(q, k_buf, v_buf, pos, *, window: Optional[int],
     return out.reshape(B, H, 1, hd).astype(q.dtype)
 
 
+def paged_attend(q, k_pool, v_pool, block_table, q_pos, *,
+                 scale: float, window: Optional[int] = None):
+    """Attention over a paged KV pool, read through a block table.
+
+    q: (B, H, C, hd); k_pool/v_pool: (P, Hkv, BS, hd) — one layer's
+    block pool; block_table: (B, nmax) int32 pool ids in *logical*
+    order (padded with the null block 0); q_pos: (B, C) absolute query
+    positions.  Because the table lists blocks logically, flattened key
+    index j of the gathered (B, Hkv, nmax*BS, hd) buffer holds sequence
+    position j — the mask is simply ``j <= q_pos`` (causal over the
+    request's own history; stale/pad slots beyond ``q_pos`` and other
+    requests' blocks are unreachable by construction).
+
+    The two branches mirror the wave engine's reference numerics
+    operation-for-operation — normalised-probs rounding for C == 1
+    (:func:`decode_attend`) and flash-style unnormalised accumulation
+    for C > 1 (``ref.chunked_mha``) — so that at temperature 0 the
+    paged engine is token-identical to the wave reference, not merely
+    close (masked lanes contribute exact zeros either way)."""
+    B, H, C, hd = q.shape
+    Hkv, BS = k_pool.shape[1], k_pool.shape[2]
+    nmax = block_table.shape[1]
+    rep = H // Hkv
+    # gather the request's blocks: (B, nmax, Hkv, BS, hd) -> (B, Hkv, S, hd)
+    kg = k_pool[block_table].transpose(0, 2, 1, 3, 4) \
+        .reshape(B, Hkv, nmax * BS, hd)
+    vg = v_pool[block_table].transpose(0, 2, 1, 3, 4) \
+        .reshape(B, Hkv, nmax * BS, hd)
+    key_pos = jnp.arange(nmax * BS)
+    ok = key_pos[None, None, :] <= q_pos[:, :, None]          # (B, C, S)
+    if window is not None:
+        ok &= key_pos[None, None, :] > q_pos[:, :, None] - window
+    if C == 1:
+        # decode: decode_attend's grouped-GQA, normalised-softmax order
+        qf = q.reshape(B, Hkv, rep, hd)
+        logits = jnp.einsum("bkrd,bksd->bkrs", qf, kg,
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(ok[:, None, None, 0, :], logits, -jnp.inf)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkrs,bksd->bkrd", p.astype(vg.dtype), vg,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, H, 1, hd).astype(q.dtype)
+    # prefill chunk: chunked_mha's repeated-KV, unnormalised-exp order
+    kb = jnp.repeat(kg, rep, axis=1)
+    vb = jnp.repeat(vg, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kb,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(ok[:, None], s, -jnp.inf)
+    m = s.max(-1)                      # rows always see >= 1 valid key
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(ok[:, None], p, 0.0)
+    l = p.sum(-1)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+                     preferred_element_type=jnp.float32)
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return out.astype(q.dtype)
+
+
 def attention(p: Dict, x, be: Policy, cfg: ModelConfig, *,
               causal: bool = True, window: Optional[int] = None,
               positions=None, kv_cache: Optional[Tuple] = None,
               pos=None, cross_kv: Optional[Tuple] = None,
+              paged_kv: Optional[Tuple] = None,
               return_kv: bool = False):
     """Unified attention layer.
 
     Modes:
       train/prefill: kv_cache None; positions (S,) or (B,S).
       decode:        kv_cache (k_buf, v_buf); pos scalar; x is (B,1,d).
+      paged:         paged_kv (k_pool, v_pool, block_table, pos (B,C));
+                     writes the chunk through the table, attends via
+                     the gather path; one code path serves chunked
+                     prefill (C>1) and slot decode (C=1).
       cross:         cross_kv (k, v) precomputed from encoder states.
     Returns y [, new_kv or (k,v) when return_kv]."""
     H, Hkv, hd = cfg.n_heads_padded, cfg.n_kv_heads_padded, cfg.head_dim_
@@ -134,6 +197,24 @@ def attention(p: Dict, x, be: Policy, cfg: ModelConfig, *,
     v = _split_heads(mm(x, p["wv"], be), Hkv, hd)
     k = constrain(k, "batch", "kv", None, None)
     v = constrain(v, "batch", "kv", None, None)
+    if paged_kv is not None:
+        # paged: rope at absolute positions, write the chunk through the
+        # block table, attend over the gathered pool
+        k_pool, v_pool, bt, qpos = paged_kv
+        BS = k_pool.shape[2]
+        q = rope(q, qpos, cfg.rope_theta)
+        k = rope(k, qpos, cfg.rope_theta)
+        blk = jnp.take_along_axis(bt, (qpos // BS).astype(jnp.int32),
+                                  axis=1)                     # (B, C)
+        off = jnp.mod(qpos, BS).astype(jnp.int32)
+        # advanced indices at dims 0 and 2 -> update shape (B, C, Hkv, hd)
+        k_pool = k_pool.at[blk, :, off, :].set(
+            k.transpose(0, 2, 1, 3).astype(k_pool.dtype))
+        v_pool = v_pool.at[blk, :, off, :].set(
+            v.transpose(0, 2, 1, 3).astype(v_pool.dtype))
+        y = paged_attend(q, k_pool, v_pool, bt, qpos, window=window,
+                         scale=scale)
+        return mm(_merge_heads(y), p["wo"], be), (k_pool, v_pool)
     if kv_cache is not None:
         # decode: rope at absolute position, ring-write, attend buffer
         k_buf, v_buf = kv_cache

@@ -191,7 +191,7 @@ def _window_for_layer(cfg: ModelConfig, i):
 
 
 def _apply_attn_block(p, x, be, cfg, i, *, kv=None, pos=None,
-                      positions=None, return_kv=False):
+                      positions=None, paged_kv=None, return_kv=False):
     """attention (+cond on local/global) + mlp/moe. Returns
     (y, aux, new_kv_or_kv_pair)."""
     needs_cond, win = _window_for_layer(cfg, i)
@@ -200,14 +200,14 @@ def _apply_attn_block(p, x, be, cfg, i, *, kv=None, pos=None,
     def run(window):
         return L.attention(p["attn"], h, be, cfg, causal=True, window=window,
                            positions=positions, kv_cache=kv, pos=pos,
-                           return_kv=return_kv)
+                           paged_kv=paged_kv, return_kv=return_kv)
 
     if needs_cond:
         is_global = (i % (cfg.attn.local_ratio + 1)) == cfg.attn.local_ratio
         out = lax.cond(is_global, lambda: run(None), lambda: run(win))
     else:
         out = run(win)
-    if kv is not None or return_kv:
+    if kv is not None or paged_kv is not None or return_kv:
         attn_out, kv_out = out
     else:
         attn_out, kv_out = out, None
@@ -473,3 +473,57 @@ def decode(params: Dict, cfg: ModelConfig, be: Policy, tokens: jax.Array,
         cache = LMCache(pos=pos + 1, attn_k=knew, attn_v=vnew)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return _unembed(params, cfg, x, be)[:, 0], cache
+
+
+# --------------------------------------------------------------------------
+# Paged KV (serving): block-pool cache + one step fn for chunked
+# prefill AND slot decode.
+# --------------------------------------------------------------------------
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """The paged path covers the pure-attention families; SSM/hybrid
+    state and the shared-attn block keep using the wave engine."""
+    return cfg.family in ("dense", "moe", "vlm") \
+        and not cfg.shared_attn_every
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16):
+    """Per-layer block pools, stacked: (L, P, Hkv, BS, hd) x2.  Block 0
+    is the null sink (see repro.serve.paged) — zero-init keeps it
+    finite for the masked reads inactive slots discard."""
+    if not paged_supported(cfg):
+        raise ValueError(f"paged KV unsupported for family={cfg.family} "
+                         f"shared_attn_every={cfg.shared_attn_every}")
+    Hkv, hd = cfg.n_kv_heads_padded, cfg.head_dim_
+    shape = (cfg.n_layers, num_blocks, Hkv, block_size, hd)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def paged_step(params: Dict, cfg: ModelConfig, be: Policy,
+               tokens: jax.Array, k_pools: jax.Array, v_pools: jax.Array,
+               block_tables: jax.Array, pos_start: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One paged step: tokens (B, C) at absolute positions
+    ``pos_start[b] + [0..C)``, K/V written through ``block_tables``
+    (B, nmax), attention read back through the same tables.
+
+    C > 1 is a prefill chunk (rows are causal within the chunk via the
+    position mask); C == 1 is a slot-level decode step — one code path,
+    two jit specialisations.  Returns (logits (B, C, Vp), k_pools,
+    v_pools)."""
+    x = _embed_tokens(params, cfg, tokens, be)
+    B, C, _ = x.shape
+    qpos = pos_start[:, None] + jnp.arange(C)[None, :]        # (B, C)
+    idxs = jnp.arange(cfg.n_layers)
+
+    def body(carry, xs):
+        x = carry
+        blk, i, kp, vp = xs
+        x, _, kv = _apply_attn_block(
+            blk, x, be, cfg, i, paged_kv=(kp, vp, block_tables, qpos))
+        return x, kv
+    x, (kps, vps) = lax.scan(body, x, (params["blocks"], idxs,
+                                       k_pools, v_pools))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x, be), kps, vps

@@ -23,6 +23,10 @@ class Model:
     prefill: Callable                 # (params, batch, be) -> (logits, cache)
     decode: Callable                  # (params, batch, cache, be) -> (logits, cache)
     init_cache: Callable              # (batch, seq_len) -> cache
+    # paged-KV serving path (repro.serve.PagedEngine); None when the
+    # family needs recurrent state the block pool doesn't carry
+    paged_step: Optional[Callable] = None   # (params, batch, pcache, be)
+    init_paged_cache: Optional[Callable] = None  # (nblocks, bs, dtype)
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -63,5 +67,18 @@ def build(cfg: ModelConfig) -> Model:
                              prefill_len=seq_len if prefill_len is None
                              else prefill_len)
 
+    pstep = mk_paged = None
+    if lm.paged_supported(cfg):
+        def pstep(params, batch, pcache, be):
+            k_pools, v_pools, tables, pos = pcache
+            logits, k_pools, v_pools = lm.paged_step(
+                params, cfg, be, batch["tokens"], k_pools, v_pools,
+                tables, pos)
+            return logits, (k_pools, v_pools)
+
+        def mk_paged(num_blocks, block_size, dtype=jnp.bfloat16):
+            return lm.init_paged_cache(cfg, num_blocks, block_size, dtype)
+
     return Model(cfg, lambda key: lm.init_lm(key, cfg),
-                 lambda: lm.lm_specs(cfg), fwd, pf, dec, mk_cache)
+                 lambda: lm.lm_specs(cfg), fwd, pf, dec, mk_cache,
+                 paged_step=pstep, init_paged_cache=mk_paged)

@@ -39,7 +39,7 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "REGISTRY", "ROUTES",
     "counter", "gauge", "histogram", "span", "enabled", "set_enabled",
     "export_bench", "load_bench", "diff_bench", "report_str", "reset",
-    "bench_root", "BENCH_SCHEMA_VERSION",
+    "bench_root", "record_trajectory", "BENCH_SCHEMA_VERSION",
 ]
 
 BENCH_SCHEMA_VERSION = 1
@@ -494,7 +494,10 @@ def export_bench(name: str, meta: Optional[dict] = None, *,
 
     The file is the repo's perf-trajectory record: schema-versioned,
     sorted keys, one file per benchmark name so successive PRs diff
-    cleanly (``python -m repro.obs diff old.json new.json``)."""
+    cleanly (``python -m repro.obs diff old.json new.json``).  An
+    existing file's ``trajectory`` list (the append-only per-PR history
+    written by :func:`record_trajectory`) is carried over, so a fresh
+    export refreshes the snapshot without erasing the history."""
     doc = {
         "bench": name,
         "schema": BENCH_SCHEMA_VERSION,
@@ -506,10 +509,60 @@ def export_bench(name: str, meta: Optional[dict] = None, *,
     path = pathlib.Path(root) if root else bench_root()
     path.mkdir(parents=True, exist_ok=True)
     out = path / f"BENCH_{name}.json"
+    if out.exists():
+        try:
+            prev = json.loads(out.read_text()).get("trajectory")
+            if prev:
+                doc["trajectory"] = prev
+        except (OSError, ValueError):
+            pass        # corrupt old file: overwrite, don't crash the bench
     tmp = out.with_suffix(".json.tmp")
     tmp.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
     tmp.replace(out)
     return out
+
+
+def record_trajectory(name: str, entry: dict, *,
+                      root: Optional[os.PathLike] = None) -> pathlib.Path:
+    """Append one per-PR row to ``BENCH_<name>.json``'s ``trajectory``.
+
+    The trajectory is the longitudinal record ROADMAP asks for: each
+    ``benchmarks/run.py --record`` run appends a small dict of headline
+    numbers (tokens/s, latency percentiles) stamped with the current
+    commit when available, so regressions are visible across PRs, not
+    just against the latest snapshot.  Creates a skeleton doc when the
+    BENCH file does not exist yet."""
+    path = pathlib.Path(root) if root else bench_root()
+    path.mkdir(parents=True, exist_ok=True)
+    out = path / f"BENCH_{name}.json"
+    try:
+        doc = json.loads(out.read_text())
+    except (OSError, ValueError):
+        doc = {"bench": name, "schema": BENCH_SCHEMA_VERSION,
+               "created_unix": time.time(), "meta": {}, "metrics": {},
+               "router": []}
+    row = {"recorded_unix": time.time()}
+    commit = _git_head()
+    if commit:
+        row["commit"] = commit
+    row.update(entry)
+    doc.setdefault("trajectory", []).append(row)
+    tmp = out.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    tmp.replace(out)
+    return out
+
+
+def _git_head() -> Optional[str]:
+    """Short commit hash of the repo containing this file, or None."""
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent, timeout=5,
+            capture_output=True, text=True, check=True).stdout.strip()
+    except Exception:
+        return None
 
 
 def load_bench(path: os.PathLike) -> dict:

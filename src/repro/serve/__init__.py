@@ -1,0 +1,18 @@
+"""repro.serve — serving engines over the IAAT-routed model stack.
+
+:class:`PagedEngine` (default): paged KV cache + slot-level continuous
+batching (mid-flight admission, chunked prefill, device-side sampling,
+preempt-on-exhaustion).  :class:`ContinuousBatcher`: the wave-based
+reference implementation and SSM/hybrid fallback.
+"""
+from repro.serve.engine import (ContinuousBatcher, PagedEngine, Request,
+                                make_serve_fns, sample)
+from repro.serve.paged import (BlockAllocator, BlockTable, CacheMap,
+                               OutOfBlocks)
+from repro.serve.sched import Seq, SlotScheduler
+
+__all__ = [
+    "ContinuousBatcher", "PagedEngine", "Request", "make_serve_fns",
+    "sample", "BlockAllocator", "BlockTable", "CacheMap", "OutOfBlocks",
+    "Seq", "SlotScheduler",
+]

@@ -1,23 +1,38 @@
-"""Serving engine: jit'd prefill/decode steps + a continuous-batching
-scheduler (slot-based, request queue, per-slot EOS/length tracking).
+"""Serving engines: the slot-level paged engine (default) and the
+wave-based reference batcher.
 
 decode-time projections are (B x d) @ (d x N) GEMMs with tiny B — the
-paper's small-GEMM regime.  The engine takes ONE :class:`repro.api.Policy`
+paper's small-GEMM regime.  Both engines take ONE :class:`repro.api.Policy`
 at construction (installed for the whole serving session — not re-entered
 per projection); ``Policy(backend="tuned")`` routes those decode GEMMs
 and the MoE expert FFN by the measured DeviceProfile.
 
+:class:`PagedEngine` is the production loop: a block/paged KV cache
+(:mod:`repro.serve.paged`), slot-level admission/eviction/preemption
+(:mod:`repro.serve.sched`), chunked prefill interleaved with decode,
+sampling fused into the jit'd decode step, and asynchronous token
+draining — so the decode batch B stays slot-stable (the Router sees a
+stationary shape histogram) and no per-token host sync starves the
+tuned kernels.
+
+:class:`ContinuousBatcher` is the wave-based reference implementation:
+a wave shares one padded prefill and slots only refill between waves.
+It remains as the parity baseline (``slots=1`` is exact unbatched
+generation) and the fallback for the SSM/hybrid families the paged
+cache does not carry state for.
+
 Every request is traced through :mod:`repro.obs`: admission wait, time
 to first token, end-to-end latency (all measured from ``submit``),
-decode throughput per wave, and wave occupancy — the numbers the
-serving-scale ROADMAP items are judged by (``BENCH_serve.json`` via
-``benchmarks/serve_stream.py``).
+slot occupancy, queue depth, preemptions and block-pool usage — the
+numbers the serving-scale ROADMAP items are judged by
+(``BENCH_serve.json`` via ``benchmarks/serve_stream.py``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +41,8 @@ import numpy as np
 from repro import api, obs
 from repro.api import Policy
 from repro.models.registry import Model
+from repro.serve import sched
+from repro.serve.paged import CacheMap, OutOfBlocks
 
 
 def make_serve_fns(model: Model, be: Optional[Policy] = None):
@@ -59,13 +76,265 @@ class Request:
     t_submit: float = 0.0              # perf_counter stamp set by submit()
 
 
-class ContinuousBatcher:
-    """Slot-based continuous batching over a fixed decode batch.
+def _round_up(n: int, m: int) -> int:
+    return -(n // -m) * m
 
-    Simplification vs a production server: prompts in one admission wave
-    share a prefill call (padded to the longest), and slots refill between
-    decode steps — the scheduling contract (admit / decode / evict-on-EOS)
-    is the real one."""
+
+# ==========================================================================
+# The paged engine (default).
+# ==========================================================================
+
+class PagedEngine:
+    """Slot-level continuous batching over a paged KV cache.
+
+    Per :meth:`step` iteration: admit queued requests into free slots
+    (mid-flight), run ONE jit'd decode step over every decoding slot
+    (sampling on device, tokens drained asynchronously every
+    ``drain_every`` steps), and run ONE prefill chunk for the oldest
+    prefilling request — so a long prompt never stalls ongoing decode.
+    Block exhaustion preempts the youngest sequence (blocks released,
+    generated tokens kept, re-queued at the front; resume re-prefills
+    prompt+generated)."""
+
+    def __init__(self, model: Model, params, be: Optional[Policy] = None,
+                 *, slots: int = 4, max_len: int = 256, eos: int = 2,
+                 temperature: float = 0.0, seed: int = 0,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 chunk: int = 32, drain_every: int = 4):
+        if model.paged_step is None:
+            raise ValueError(
+                f"{model.cfg.name}: family {model.cfg.family!r} has no "
+                "paged decode path — use ContinuousBatcher")
+        be = be if be is not None else api.current_policy()
+        self.model, self.params, self.be = model, params, be
+        self.slots, self.max_len, self.eos = slots, max_len, eos
+        self.temperature, self.chunk = temperature, chunk
+        self.drain_every = max(1, drain_every)
+        self.key = jax.random.PRNGKey(seed)
+        # table width covers max_len, rounded so prefill pad rows (the
+        # chunk tail past the prompt) always have a backing block
+        table_len = _round_up(_round_up(max_len, block_size), chunk)
+        if num_blocks is None:
+            num_blocks = 1 + slots * (table_len // block_size)
+        self.cache = CacheMap(num_blocks, block_size, table_len)
+        self.scheduler = sched.SlotScheduler(self.cache, slots)
+        self.done: Dict[int, List[int]] = {}
+        dtype = model.cfg.compute_dtype
+        self._kp, self._vp = model.init_paged_cache(
+            num_blocks, block_size, dtype)
+        self._cur = jnp.zeros((slots,), jnp.int32)
+        # (token_array, [(seq, slot)]) per issued decode step, drained
+        # in order; holding the arrays (instead of np.asarray per step)
+        # is what lets device steps pipeline
+        self._pending: List[tuple] = []
+
+        def _decode(p, cur, kp, vp, bt, pos, k):
+            logits, (kp, vp) = model.paged_step(
+                p, {"tokens": cur[:, None]}, (kp, vp, bt, pos), be)
+            k, sub = jax.random.split(k)
+            nxt = sample(logits[:, -1], sub, temperature)
+            return nxt.astype(jnp.int32), kp, vp, k
+
+        def _prefill(p, toks, kp, vp, bt, pos0, last_idx):
+            logits, (kp, vp) = model.paged_step(
+                p, {"tokens": toks}, (kp, vp, bt, pos0), be)
+            row = jax.lax.dynamic_index_in_dim(logits[0], last_idx,
+                                               axis=0, keepdims=False)
+            return row, kp, vp
+
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2, 3))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(2, 3))
+
+    # -- API (mirrors ContinuousBatcher) -----------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(f"request {req.rid} exceeds max_len "
+                             f"{self.max_len}")
+        obs.counter("serve.requests").inc()
+        seq = sched.Seq(req=req)
+        # worst-case footprint: the longest possible resume target
+        # (prompt + max_new-1 generated) prefilled with a chunk-padded
+        # tail — what the fit check must clear for livelock-free preempt
+        worst = _round_up(
+            max(1, len(req.prompt) + req.max_new - 1), self.chunk)
+        self.scheduler.submit(seq, fit_tokens=worst)
+
+    def step(self) -> bool:
+        """One scheduler iteration; False when fully idle."""
+        worked = False
+        now = time.perf_counter()
+        for seq in self.scheduler.admit():
+            worked = True
+            if not seq.admitted_once:
+                seq.admitted_once = True
+                obs.histogram("serve.admission_wait_us").record(
+                    (now - seq.req.t_submit) * 1e6)
+        dec = [q for q in self.scheduler.decoding() if q.budget_left > 0]
+        for q in list(dec):
+            if q.state == sched.DECODE:
+                self._ensure(q, q.pos + 1)
+        dec = [q for q in self.scheduler.decoding() if q.budget_left > 0]
+        if dec:
+            self._issue_decode(dec)
+            worked = True
+        pre = self.scheduler.next_prefill()
+        if pre is not None:
+            self._prefill_chunk(pre)
+            worked = True
+        if self._pending and (
+                len(self._pending) >= self.drain_every
+                or not any(q.budget_left > 0
+                           for q in self.scheduler.decoding())):
+            self._drain()
+        if worked:
+            obs.histogram("serve.slot_occupancy").record(
+                self.scheduler.active() / self.slots)
+            obs.histogram("serve.queue_depth").record(
+                len(self.scheduler.queue))
+            obs.gauge("serve.blocks_in_use").set(self.cache.blocks_in_use)
+        return worked
+
+    def run(self) -> Dict[int, List[int]]:
+        stall = 0
+        while True:
+            if self.step():
+                stall = 0
+                continue
+            if self._pending:
+                self._drain()
+                continue
+            if not self.scheduler.has_work():
+                break
+            stall += 1
+            if stall > 10000:   # fail loudly, never hang
+                raise RuntimeError("paged engine stalled: "
+                                   f"{self.scheduler.active()} live, "
+                                   f"{len(self.scheduler.queue)} queued")
+        return self.done
+
+    # -- internals ---------------------------------------------------------
+
+    def _ensure(self, seq: sched.Seq, n_tokens: int) -> bool:
+        """Back ``seq`` with blocks for ``n_tokens`` positions,
+        preempting (youngest first) on exhaustion.  False when ``seq``
+        itself was the victim (it is re-queued; stop working on it)."""
+        drained = False
+        while True:
+            try:
+                self.cache.ensure(seq.rid, n_tokens)
+                return True
+            except OutOfBlocks:
+                if not drained and self._pending:
+                    self._drain()      # EOS finishes may free blocks
+                    drained = True
+                    if seq.state != sched.DECODE and \
+                            seq.state != sched.PREFILL:
+                        return False   # finished during the drain
+                    continue
+                self._drain()
+                victim = self.scheduler.preempt_victim(seq)
+                if victim is None:
+                    raise RuntimeError("block pool exhausted with no "
+                                       "active sequence to preempt")
+                if victim is seq and self.scheduler.active() == 1:
+                    raise RuntimeError(
+                        "block pool exhausted by a single sequence that "
+                        "passed the admission fit check — pool leak?")
+                self.scheduler.preempt(victim)
+                if victim is seq:
+                    return False
+
+    def _issue_decode(self, dec: List[sched.Seq]) -> None:
+        bt = np.zeros((self.slots, self.cache.nmax), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        for q in dec:
+            bt[q.slot] = self.cache.row(q.rid)
+            pos[q.slot] = q.pos
+        self._cur, self._kp, self._vp, self.key = self._decode_fn(
+            self.params, self._cur, self._kp, self._vp,
+            jnp.asarray(bt), jnp.asarray(pos), self.key)
+        self._pending.append((self._cur, [(q, q.slot) for q in dec]))
+        for q in dec:
+            q.pos += 1
+            q.inflight += 1
+
+    def _prefill_chunk(self, seq: sched.Seq) -> None:
+        p0, C = seq.pos, self.chunk
+        if not self._ensure(seq, p0 + C):
+            return                      # preempted itself; re-queued
+        target = seq.target
+        segment = target[p0:p0 + C]
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :len(segment)] = segment
+        final = (p0 + len(segment)) == len(target)
+        last_idx = np.int32(len(segment) - 1)
+        row, self._kp, self._vp = self._prefill_fn(
+            self.params, jnp.asarray(toks), self._kp, self._vp,
+            jnp.asarray(self.cache.row(seq.rid)[None]),
+            jnp.asarray([p0], dtype=jnp.int32), last_idx)
+        seq.pos = p0 + len(segment)
+        obs.counter("serve.prefill_chunks").inc()
+        if not final:
+            return
+        # host-side sample for the prefill boundary token only — every
+        # subsequent token is sampled inside the jit'd decode step
+        self.key, k = jax.random.split(self.key)
+        tok = int(np.asarray(sample(row, k, self.temperature)))
+        seq.out.append(tok)
+        obs.counter("serve.tokens").inc()
+        if len(seq.out) == 1:
+            obs.histogram("serve.ttft_us").record(
+                (time.perf_counter() - seq.req.t_submit) * 1e6)
+        # like the wave reference, the request's FIRST token is exempt
+        # from EOS (a request always yields at least one token); a
+        # post-preemption boundary token is an ordinary decode token
+        # and does get the EOS check
+        if (tok == self.eos and len(seq.out) > 1) \
+                or len(seq.out) >= seq.req.max_new:
+            self._finish(seq)
+        else:
+            seq.state = sched.DECODE
+            self._cur = self._cur.at[seq.slot].set(tok)
+
+    def _drain(self) -> None:
+        """Pull every pending decode token to the host in one pass and
+        apply EOS / token-budget eviction with the (bounded) lag the
+        async pipeline allows."""
+        pend, self._pending = self._pending, []
+        for arr, entries in pend:
+            host = np.asarray(arr)
+            for q, slot in entries:
+                q.inflight -= 1
+                if q.state != sched.DECODE:
+                    continue            # evicted earlier in this drain
+                tok = int(host[slot])
+                q.out.append(tok)
+                obs.counter("serve.tokens").inc()
+                if tok == self.eos or len(q.out) >= q.req.max_new:
+                    self._finish(q)
+
+    def _finish(self, seq: sched.Seq) -> None:
+        self.done[seq.rid] = seq.out
+        obs.histogram("serve.e2e_us").record(
+            (time.perf_counter() - seq.req.t_submit) * 1e6)
+        self.scheduler.finish(seq)
+
+
+# ==========================================================================
+# The wave-based reference engine.
+# ==========================================================================
+
+class ContinuousBatcher:
+    """Wave-based continuous batching over a fixed decode batch.
+
+    Simplification vs the paged engine: prompts in one admission wave
+    share a prefill call (padded to the longest), ``cache_len`` is
+    pre-committed for the whole wave, and slots only refill between
+    waves.  Kept as the reference implementation — ``slots=1`` is exact
+    unbatched generation, the baseline the paged engine's parity test
+    compares against — and as the serving path for SSM/hybrid families."""
 
     def __init__(self, model: Model, params, be: Optional[Policy] = None,
                  *, slots: int = 4, max_len: int = 256, eos: int = 2,
@@ -77,10 +346,16 @@ class ContinuousBatcher:
         self.slots, self.max_len, self.eos = slots, max_len, eos
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self.done: Dict[int, List[int]] = {}
-        self._decode = jax.jit(
-            lambda p, t, c: model.decode(p, {"tokens": t}, c, be))
+
+        def _decode(p, t, c, k):
+            logits, c = model.decode(p, {"tokens": t}, c, be)
+            # sampling fused into the step: only (B,) token ids cross
+            # to the host, never the (B, V) logits
+            return sample(logits, k, temperature).astype(jnp.int32), c
+
+        self._decode = jax.jit(_decode)
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.perf_counter()
@@ -94,7 +369,7 @@ class ContinuousBatcher:
         scheduler — the admission-wait histogram prices that gap)."""
         if not self.queue:
             return False
-        wave = [self.queue.pop(0) for _ in range(
+        wave = [self.queue.popleft() for _ in range(
             min(self.slots, len(self.queue)))]
         self._run_wave(wave)
         return True
@@ -131,14 +406,15 @@ class ContinuousBatcher:
             ttft.record((t_first - wave[i].t_submit) * 1e6)
         steps = max(r.max_new for r in wave) - 1
         decoded = 0
+        cur_dev = jnp.asarray(cur.astype(np.int32))
         with obs.span("serve.decode"):
             for _ in range(max(steps, 0)):
                 if not alive.any():
                     break
                 self.key, k = jax.random.split(self.key)
-                logits, cache = self._decode(
-                    self.params, jnp.asarray(cur[:, None]), cache)
-                cur = np.asarray(sample(logits, k, self.temperature))
+                cur_dev, cache = self._decode(
+                    self.params, cur_dev[:, None], cache, k)
+                cur = np.asarray(cur_dev)
                 for i in range(B):
                     if alive[i]:
                         tok = int(cur[i])

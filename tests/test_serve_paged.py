@@ -1,0 +1,244 @@
+"""repro.serve.paged + sched + PagedEngine: block allocator properties,
+scheduler state machine, and end-to-end parity with the wave reference.
+
+The parity oracle is the wave engine at ``slots=1``: the wave engine
+left-pads mixed-length prompts within a wave (pad tokens shift
+positions), so its multi-slot outputs are batch-composition dependent —
+only the unbatched run is the exact per-request generation the paged
+engine must reproduce at temperature 0.
+"""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs, obs
+from repro.models import registry
+from repro.models.common import XLA
+from repro.serve import (BlockAllocator, CacheMap, ContinuousBatcher,
+                         OutOfBlocks, PagedEngine, Request, Seq,
+                         SlotScheduler)
+from repro.serve import sched
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# Block allocator properties (pure host, no model).
+# --------------------------------------------------------------------------
+
+def test_allocator_unique_ids_and_exhaustion():
+    a = BlockAllocator(8)                       # 7 usable; block 0 is null
+    got = [a.alloc() for _ in range(7)]
+    assert len(set(got)) == 7 and 0 not in got
+    assert a.available == 0
+    with pytest.raises(OutOfBlocks):
+        a.alloc()
+
+
+def test_allocator_double_free_and_null_free_rejected():
+    a = BlockAllocator(4)
+    b = a.alloc()
+    a.free([b])
+    with pytest.raises(ValueError):
+        a.free([b])
+    with pytest.raises(ValueError):
+        a.free([0])
+
+
+def test_allocator_churn_no_leak_no_alias():
+    """Random alloc/free interleaving: held ids stay disjoint from the
+    free list and held + available always equals capacity (no leak)."""
+    a = BlockAllocator(16)
+    rng = random.Random(0)
+    held = []
+    for _ in range(500):
+        if held and (rng.random() < 0.5 or a.available == 0):
+            a.free([held.pop(rng.randrange(len(held)))])
+        else:
+            b = a.alloc()
+            assert b not in held, "allocator aliased a live block"
+            held.append(b)
+        assert len(held) + a.available == a.capacity
+    a.free(held)
+    assert a.available == a.capacity
+
+
+def test_cache_map_grow_release_row():
+    c = CacheMap(num_blocks=9, block_size=4, max_seq_len=16)
+    c.ensure(7, 3)
+    assert len(c.row(7)) == 4 and c.blocks_in_use == 1
+    c.ensure(7, 9)                              # grow to 3 blocks
+    row = c.row(7)
+    assert c.blocks_in_use == 3 and (row[3] == 0)   # null-padded tail
+    assert len(set(row[:3])) == 3
+    c.release(7)
+    assert c.blocks_in_use == 0 and c.allocator.available == 8
+    assert c.fits_ever(16) and not c.fits_ever(17)
+
+
+# --------------------------------------------------------------------------
+# Scheduler state machine (host-only; CacheMap is pure host state).
+# --------------------------------------------------------------------------
+
+def _mk_sched(slots=2, num_blocks=9, block_size=4, max_seq=16):
+    return SlotScheduler(CacheMap(num_blocks, block_size, max_seq), slots)
+
+
+def _seq(rid, plen=3, max_new=4):
+    return Seq(Request(rid, np.zeros(plen, np.int32), max_new=max_new))
+
+
+def test_scheduler_fifo_admission_and_midflight_refill():
+    s = _mk_sched(slots=2)
+    for rid in range(4):
+        s.submit(_seq(rid))
+    admitted = s.admit()
+    assert [q.rid for q in admitted] == [0, 1]      # FIFO into free slots
+    assert s.admit() == []                          # slots full, queue waits
+    s.finish(s.live[0])                             # mid-flight departure
+    assert [q.rid for q in s.admit()] == [2]        # next in line, same slot
+    assert sorted(s.live) == [1, 2]
+
+
+def test_scheduler_finish_frees_blocks_and_slot():
+    s = _mk_sched(slots=1)
+    s.submit(_seq(5))
+    (q,) = s.admit()
+    s.cache.ensure(5, 9)
+    assert s.cache.blocks_in_use == 3
+    s.finish(q)
+    assert s.cache.blocks_in_use == 0
+    assert q.state == sched.DONE and s.slots[0] is None
+
+
+def test_scheduler_preempt_requeues_front_and_frees():
+    s = _mk_sched(slots=2)
+    s.submit(_seq(0))
+    s.submit(_seq(1))
+    a, b = s.admit()
+    s.cache.ensure(b.rid, 5)
+    b.out = [7, 8]                              # generated prefix survives
+    assert s.preempt_victim(a) is b             # youngest admitted loses
+    s.preempt(b)
+    assert s.cache.blocks_in_use == 0
+    assert b.state == sched.QUEUED and b.pos == 0 and b.preemptions == 1
+    assert b.out == [7, 8] and b.target[-2:] == [7, 8]
+    s.submit(_seq(2))
+    assert [q.rid for q in s.admit()] == [1]    # front of queue, before 2
+
+
+def test_scheduler_rejects_never_fitting_request():
+    s = _mk_sched(slots=1, num_blocks=3, block_size=4, max_seq=8)
+    with pytest.raises(ValueError):
+        s.submit(_seq(0, plen=6, max_new=8))    # 14 > 8-token pool
+
+
+# --------------------------------------------------------------------------
+# End-to-end parity with the wave reference (shared smoke model).
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = configs.get_smoke("olmo-1b")
+    model = registry.build(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _wave_ref(model, params, prompts, maxnew, eos=-1):
+    """Unbatched wave-engine generations (the exact per-request oracle)."""
+    ref = {}
+    for rid, (p, mn) in enumerate(zip(prompts, maxnew)):
+        b = ContinuousBatcher(model, params, XLA, slots=1, max_len=64,
+                              eos=eos)
+        b.submit(Request(rid, p, max_new=mn))
+        ref.update(b.run())
+    return ref
+
+
+def test_paged_parity_mixed_lengths_mid_decode_admission(smoke):
+    """Token-identical to the wave engine at temperature 0 across mixed
+    prompt lengths / budgets, with half the requests admitted mid-decode
+    of the others."""
+    cfg, model, params = smoke
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, cfg.vocab, n).astype(np.int32)
+               for n in (5, 9, 3, 17, 2)]
+    maxnew = [6, 5, 6, 3, 8]
+    ref = _wave_ref(model, params, prompts, maxnew)
+
+    e = PagedEngine(model, params, XLA, slots=2, max_len=64, eos=-1,
+                    block_size=8, chunk=8)
+    for rid in range(2):
+        e.submit(Request(rid, prompts[rid], max_new=maxnew[rid]))
+    for _ in range(4):                          # both slots mid-decode
+        e.step()
+    for rid in range(2, 5):                     # admitted mid-flight
+        e.submit(Request(rid, prompts[rid], max_new=maxnew[rid]))
+    assert e.run() == ref
+    assert e.cache.blocks_in_use == 0           # every eviction freed
+
+
+def test_paged_parity_under_preemption(smoke):
+    """A pool too small for both decoders forces preemption; recompute
+    resume keeps the continuation token-identical."""
+    cfg, model, params = smoke
+    obs.reset()
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab, 7).astype(np.int32)
+               for _ in range(2)]
+    ref = _wave_ref(model, params, prompts, [10, 10])
+
+    # capacity 3 blocks x 8 = 24 tokens; each request needs 2 blocks by
+    # mid-decode, so demand hits 4 > 3 and the younger request cycles
+    # through preempt -> re-queue -> recompute.
+    e = PagedEngine(model, params, XLA, slots=2, max_len=24, eos=-1,
+                    block_size=8, chunk=8, num_blocks=4)
+    for rid, p in enumerate(prompts):
+        e.submit(Request(rid, p, max_new=10))
+    assert e.run() == ref
+    assert obs.counter("serve.preemptions").value > 0
+    assert e.cache.blocks_in_use == 0
+
+
+def test_paged_parity_eos_eviction(smoke):
+    """EOS truncation matches the wave engine and returns blocks."""
+    cfg, model, params = smoke
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab, n).astype(np.int32)
+               for n in (4, 6)]
+    free_run = _wave_ref(model, params, prompts, [8, 8])
+    eos = free_run[0][2]                        # a token that WILL appear
+    ref = _wave_ref(model, params, prompts, [8, 8], eos=eos)
+    assert any(len(v) < 8 for v in ref.values())    # eviction exercised
+
+    e = PagedEngine(model, params, XLA, slots=2, max_len=64, eos=eos,
+                    block_size=8, chunk=8)
+    for rid, p in enumerate(prompts):
+        e.submit(Request(rid, p, max_new=8))
+    assert e.run() == ref
+    assert e.cache.blocks_in_use == 0
+
+
+def test_chunked_prefill_does_not_starve_decode(smoke):
+    """A short decoding request keeps emitting tokens while a long
+    prompt prefills chunk-by-chunk next to it — the short one finishes
+    BEFORE the long one produces its first token."""
+    cfg, model, params = smoke
+    rng = np.random.RandomState(4)
+    short = rng.randint(0, cfg.vocab, 3).astype(np.int32)
+    long = rng.randint(0, cfg.vocab, 48).astype(np.int32)
+
+    e = PagedEngine(model, params, XLA, slots=2, max_len=64, eos=-1,
+                    block_size=8, chunk=8)
+    e.submit(Request(0, short, max_new=4))
+    while not e.scheduler.decoding():           # short is decoding...
+        e.step()
+    e.submit(Request(1, long, max_new=2))       # ...long starts prefilling
+    while 0 not in e.done:
+        e.step()
+    q = e.scheduler.live.get(1)
+    assert q is not None and q.state == sched.PREFILL and not q.out
+    done = e.run()
+    assert sorted(done) == [0, 1] and len(done[1]) == 2
