@@ -10,13 +10,18 @@ reference (:class:`repro.serve.ContinuousBatcher`); the engines' own
 time-to-first-token, end-to-end latency (p50/p99), admission wait,
 decode throughput, slot/wave occupancy.  ``main()`` exports the numbers
 as ``BENCH_serve.json`` with a per-engine summary in ``meta`` so one
-file records the paged-vs-wave comparison; ``--gate`` fails the run when
-paged p99 end-to-end latency regresses >20% against the checked-in
-baseline, and ``--record`` appends a trajectory row (the per-PR history
+file records the paged-vs-wave comparison; ``--model`` repeats to
+stream several smoke archs (per-model sections land under
+``meta.models`` — this is how the recurrent families get their own
+paged rows); ``--gate`` fails the run when any streamed model's paged
+p99 end-to-end latency regresses >20% against the checked-in baseline,
+and ``--record`` appends a trajectory row (the per-PR history
 ``benchmarks/run.py --record`` maintains).
 
     PYTHONPATH=src python benchmarks/serve_stream.py --requests 16
     PYTHONPATH=src python benchmarks/serve_stream.py --engine both --gate
+    PYTHONPATH=src python benchmarks/serve_stream.py \
+        --model glm4-9b --model mamba2-780m --engine both --record
 """
 from __future__ import annotations
 
@@ -156,24 +161,36 @@ def bench(engines, **kw):
     return meta, rows
 
 
-def baseline_p99(doc) -> float:
-    """Paged p99 e2e from a BENCH_serve doc (older docs fall back to the
-    top-level metric, which then priced the wave engine)."""
-    eng = doc.get("meta", {}).get("engines", {})
+def baseline_p99(doc, model: str | None = None) -> float:
+    """Paged p99 e2e from a BENCH_serve doc.  ``model`` reads that
+    model's section under ``meta.models``; docs from before multi-model
+    runs fall back to the top-level engines block (which priced the
+    doc's primary model) and, older still, to the top-level metric
+    (which then priced the wave engine)."""
+    meta = doc.get("meta", {})
+    if model is not None:
+        sec = meta.get("models", {}).get(model, {}).get("engines", {})
+        p99 = sec.get("paged", {}).get("e2e_p99_us")
+        if p99:
+            return float(p99)
+        if meta.get("model") not in (None, model):
+            return 0.0              # baseline never measured this model
+    eng = meta.get("engines", {})
     p99 = eng.get("paged", {}).get("e2e_p99_us")
     if p99 is None:
         p99 = doc.get("metrics", {}).get("serve.e2e_us", {}).get("p99")
     return float(p99) if p99 else 0.0
 
 
-def check_gate(baseline_doc, new_p99: float):
+def check_gate(baseline_doc, new_p99: float, model: str | None = None):
     """Returns (ok, message) for the p99-e2e regression gate."""
-    old = baseline_p99(baseline_doc)
+    tag = f"[{model}] " if model else ""
+    old = baseline_p99(baseline_doc, model)
     if not old:
-        return True, "gate: no baseline p99 — skipped"
+        return True, f"gate: {tag}no baseline p99 — skipped"
     pct = (new_p99 - old) / old * 100.0
     ok = pct <= GATE_PCT
-    return ok, (f"gate: paged e2e p99 {new_p99:.0f}us vs baseline "
+    return ok, (f"gate: {tag}paged e2e p99 {new_p99:.0f}us vs baseline "
                 f"{old:.0f}us ({pct:+.1f}%, limit +{GATE_PCT:.0f}%)")
 
 
@@ -202,7 +219,10 @@ def main() -> None:
     ap.add_argument("--rate-hz", type=float, default=4.0)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--model", default="glm4-9b")
+    ap.add_argument("--model", action="append", default=None,
+                    help="smoke arch to stream (repeatable; first one is "
+                         "the primary whose engines block tops the "
+                         "export; default glm4-9b)")
     ap.add_argument("--policy", default="xla",
                     choices=("xla", "pallas", "auto", "tuned"))
     ap.add_argument("--seed", type=int, default=0)
@@ -224,44 +244,57 @@ def main() -> None:
         baseline = json.loads(pathlib.Path(bench_path).read_text())
 
     engines = ("wave", "paged") if args.engine == "both" else (args.engine,)
-    meta, rows = bench(engines, n_requests=args.requests,
-                       rate_hz=args.rate_hz, slots=args.slots,
-                       max_new=args.max_new, model_name=args.model,
-                       policy=args.policy, seed=args.seed)
-    for name, val, n in rows:
-        print(f"{name}: {val}  (n={n})")
-    for engine, s in meta["engines"].items():
-        print(f"[{engine}] {s['tokens']} tokens in {s['wall_s']}s "
-              f"-> {s['tokens_per_s']} tok/s")
+    models = args.model or ["glm4-9b"]
+    kw = dict(n_requests=args.requests, rate_hz=args.rate_hz,
+              slots=args.slots, max_new=args.max_new, policy=args.policy,
+              seed=args.seed)
+    meta = None
+    for i, mn in enumerate(models):
+        m, rows = bench(engines, model_name=mn, **kw)
+        if i == 0:
+            # primary model keeps the legacy top-level engines block
+            meta = m
+            meta["models"] = {}
+        meta["models"][mn] = {"engines": m["engines"]}
+        for name, val, n in rows:
+            suffix = f"@{mn}" if len(models) > 1 else ""
+            print(f"{name}{suffix}: {val}  (n={n})")
+        for engine, s in m["engines"].items():
+            print(f"[{mn}:{engine}] {s['tokens']} tokens in {s['wall_s']}s "
+                  f"-> {s['tokens_per_s']} tok/s")
 
     if not args.no_export:
         path = obs.export_bench("serve", meta)
         print(f"wrote {path}")
     if args.record:
         obs.record_trajectory("serve", {"engines": meta["engines"],
+                                        "models": meta["models"],
                                         "requests": args.requests,
                                         "rate_hz": args.rate_hz})
         print("appended trajectory row")
 
     failed = False
-    if args.gate and "paged" in meta["engines"]:
-        ok, msg = check_gate(baseline or {},
-                             meta["engines"]["paged"].get("e2e_p99_us", 0.0))
-        # over a short open-loop stream p99 is nearly a max statistic —
-        # one host hiccup doubles it — so re-measure before failing; a
-        # real capability regression fails every repeat.
-        retries = 0
-        while not ok and retries < 2:
-            retries += 1
-            obs.reset()
-            m, _, _ = stream(engine="paged", n_requests=args.requests,
-                             rate_hz=args.rate_hz, slots=args.slots,
-                             max_new=args.max_new, model_name=args.model,
-                             policy=args.policy, seed=args.seed)
+    if args.gate and "paged" in engines:
+        for mn in models:
+            sec = meta["models"][mn]["engines"]
+            if "paged" not in sec:
+                continue
             ok, msg = check_gate(baseline or {},
-                                 _summary(m).get("e2e_p99_us", 0.0))
-        print(msg + (f" [retries: {retries}]" if retries else ""))
-        failed = not ok
+                                 sec["paged"].get("e2e_p99_us", 0.0), mn)
+            # over a short open-loop stream p99 is nearly a max
+            # statistic — one host hiccup doubles it — so re-measure
+            # before failing; a real capability regression fails every
+            # repeat.
+            retries = 0
+            while not ok and retries < 2:
+                retries += 1
+                obs.reset()
+                m, _, _ = stream(engine="paged", model_name=mn, **kw)
+                ok, msg = check_gate(baseline or {},
+                                     _summary(m).get("e2e_p99_us", 0.0),
+                                     mn)
+            print(msg + (f" [retries: {retries}]" if retries else ""))
+            failed = failed or not ok
     if failed:
         sys.exit(1)
 

@@ -21,9 +21,10 @@ params = model.init(jax.random.PRNGKey(0))
 
 # one Policy installed at model entry; the engine snapshots it (swap in
 # named_policy("tuned") after `python -m repro.tune` to serve off the
-# measured DeviceProfile).  PagedEngine is the default serving path —
-# paged KV blocks + slot-level scheduling; swap in ContinuousBatcher
-# for the wave-based reference (or an SSM/hybrid backbone).
+# measured DeviceProfile).  PagedEngine is the production serving path
+# for every decoder-only family — paged KV blocks + per-slot recurrent
+# state + slot-level scheduling; try cfg = get_smoke("mamba2-780m") or
+# "zamba2-7b" to serve a recurrent backbone through the same engine.
 api.install(api.named_policy("xla"))
 batcher = PagedEngine(model, params, slots=4, max_len=128,
                       temperature=0.8, seed=0, block_size=16)

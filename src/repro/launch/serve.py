@@ -3,9 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
         --requests 8 --max-new 16
 
-``--engine auto`` (default) serves with the paged slot-level engine
-whenever the family supports the block pool, falling back to the
-wave-based reference for SSM/hybrid backbones.
+Every decoder-only family serves through the paged slot-level engine
+(attention K/V in the block pool, recurrent carries in per-slot state
+rows); there is no wave fallback any more.  ``--engine auto`` is kept
+as an alias for ``paged`` so existing invocations don't break, and the
+``serve.engine_fallback`` counter records how often a family misses
+the paged path (asserted 0 in tests for every registry family).
 """
 from __future__ import annotations
 
@@ -16,9 +19,9 @@ import time
 import jax
 import numpy as np
 
-from repro import api, configs
+from repro import api, configs, obs
 from repro.models.registry import build as build_model
-from repro.serve import ContinuousBatcher, PagedEngine, Request
+from repro.serve import PagedEngine, Request
 
 log = logging.getLogger("repro.serve")
 
@@ -29,7 +32,7 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--engine", default="auto",
-                    choices=("auto", "paged", "wave"))
+                    choices=("auto", "paged"))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -45,27 +48,21 @@ def main() -> None:
     if cfg.family in ("encdec", "audio"):
         raise SystemExit("use a decoder-only arch for the serve demo")
     model = build_model(cfg)
-    engine = args.engine
-    if engine == "auto":
-        engine = "paged" if model.paged_step is not None else "wave"
-    elif engine == "paged" and model.paged_step is None:
-        raise SystemExit(f"--engine paged: family {cfg.family!r} needs "
-                         f"recurrent state the block pool doesn't carry; "
-                         f"use --engine wave")
+    if model.paged_decode is None:
+        # should be unreachable for any decoder-only registry family;
+        # the counter is asserted 0 in tests so a regression that
+        # reopens the engine split cannot land silently
+        obs.counter("serve.engine_fallback").inc()
+        raise SystemExit(f"--engine paged: family {cfg.family!r} has no "
+                         f"paged serving path")
     # model-entry policy install: the engine snapshots the ambient policy
     be = api.install(api.named_policy(args.backend, interpret=True))
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.RandomState(args.seed)
-    if engine == "paged":
-        batcher = PagedEngine(model, params, be, slots=args.slots,
-                              max_len=256, temperature=args.temperature,
-                              seed=args.seed, block_size=args.block_size)
-    else:
-        batcher = ContinuousBatcher(model, params, be, slots=args.slots,
-                                    max_len=256,
-                                    temperature=args.temperature,
-                                    seed=args.seed)
-    log.info("engine=%s arch=%s slots=%d", engine, args.arch, args.slots)
+    batcher = PagedEngine(model, params, be, slots=args.slots,
+                          max_len=256, temperature=args.temperature,
+                          seed=args.seed, block_size=args.block_size)
+    log.info("engine=paged arch=%s slots=%d", args.arch, args.slots)
     t0 = time.time()
     for rid in range(args.requests):
         plen = int(rng.randint(4, 24))

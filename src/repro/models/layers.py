@@ -109,7 +109,8 @@ def decode_attend(q, k_buf, v_buf, pos, *, window: Optional[int],
 
 
 def paged_attend(q, k_pool, v_pool, block_table, q_pos, *,
-                 scale: float, window: Optional[int] = None):
+                 scale: float, window: Optional[int] = None,
+                 decode_from=None):
     """Attention over a paged KV pool, read through a block table.
 
     q: (B, H, C, hd); k_pool/v_pool: (P, Hkv, BS, hd) — one layer's
@@ -121,12 +122,19 @@ def paged_attend(q, k_pool, v_pool, block_table, q_pos, *,
     request's own history; stale/pad slots beyond ``q_pos`` and other
     requests' blocks are unreachable by construction).
 
-    The two branches mirror the wave engine's reference numerics
-    operation-for-operation — normalised-probs rounding for C == 1
-    (:func:`decode_attend`) and flash-style unnormalised accumulation
-    for C > 1 (``ref.chunked_mha``) — so that at temperature 0 the
-    paged engine is token-identical to the wave reference, not merely
-    close (masked lanes contribute exact zeros either way)."""
+    The branches mirror the wave engine's reference numerics
+    operation-for-operation — normalised-probs rounding for decode
+    tokens (:func:`decode_attend`) and flash-style unnormalised
+    accumulation for prefill rows (``ref.chunked_mha``) — so that at
+    temperature 0 the paged engine is token-identical to the wave
+    reference, not merely close (masked lanes contribute exact zeros
+    either way).  ``decode_from`` (B,) marks where the ORIGINAL decode
+    boundary sits: a recompute-resume chunk replays positions that the
+    reference timeline processed one token at a time, so rows at
+    ``q_pos >= decode_from`` select the decode numerics even inside a
+    C > 1 chunk — without this the replayed rows pick up flash-vs-
+    softmax rounding, the recurrent carries inherit it, and the
+    continuation after preemption drifts off the oracle."""
     B, H, C, hd = q.shape
     Hkv, BS = k_pool.shape[1], k_pool.shape[2]
     nmax = block_table.shape[1]
@@ -162,8 +170,21 @@ def paged_attend(q, k_pool, v_pool, block_table, q_pos, *,
     l = p.sum(-1)
     acc = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
                      preferred_element_type=jnp.float32)
-    out = acc / jnp.maximum(l, 1e-37)[..., None]
-    return out.astype(q.dtype)
+    flash = (acc / jnp.maximum(l, 1e-37)[..., None]).astype(q.dtype)
+    if decode_from is None:
+        return flash
+    # recompute-resume: replayed decode rows take decode_attend's
+    # op-for-op numerics (same grouped-GQA shapes, batched over C)
+    qf = q.reshape(B, Hkv, rep, C, hd)
+    logits = jnp.einsum("bkrqd,bksd->bkrqs", qf, kg,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(ok[:, None, None], logits, -jnp.inf)
+    pd = jax.nn.softmax(logits, axis=-1)
+    outd = jnp.einsum("bkrqs,bksd->bkrqd", pd.astype(vg.dtype), vg,
+                      preferred_element_type=jnp.float32)
+    outd = outd.reshape(B, H, C, hd).astype(q.dtype)
+    replay = q_pos >= decode_from[:, None]                    # (B, C)
+    return jnp.where(replay[:, None, :, None], outd, flash)
 
 
 def attention(p: Dict, x, be: Policy, cfg: ModelConfig, *,
@@ -200,7 +221,11 @@ def attention(p: Dict, x, be: Policy, cfg: ModelConfig, *,
     if paged_kv is not None:
         # paged: rope at absolute positions, write the chunk through the
         # block table, attend over the gathered pool
-        k_pool, v_pool, bt, qpos = paged_kv
+        if len(paged_kv) == 5:
+            k_pool, v_pool, bt, qpos, decode_from = paged_kv
+        else:
+            k_pool, v_pool, bt, qpos = paged_kv
+            decode_from = None
         BS = k_pool.shape[2]
         q = rope(q, qpos, cfg.rope_theta)
         k = rope(k, qpos, cfg.rope_theta)
@@ -213,7 +238,7 @@ def attention(p: Dict, x, be: Policy, cfg: ModelConfig, *,
         v_pool = v_pool.at[blk, :, off, :].set(
             v.transpose(0, 2, 1, 3).astype(v_pool.dtype))
         y = paged_attend(q, k_pool, v_pool, bt, qpos, window=window,
-                         scale=scale)
+                         scale=scale, decode_from=decode_from)
         return mm(_merge_heads(y), p["wo"], be), (k_pool, v_pool)
     if kv_cache is not None:
         # decode: rope at absolute position, ring-write, attend buffer

@@ -357,7 +357,7 @@ def prefill(params: Dict, cfg: ModelConfig, be: Policy, tokens: jax.Array,
     W = cache_buffer_len(cfg, cache_len)
 
     if cfg.family in ("ssm", "hybrid"):
-        shared_ks, shared_vs = [], []
+        zero = S.init_paged_state(cfg, B, cfg.compute_dtype)
 
         def body(carry, xs):
             x = carry
@@ -367,9 +367,14 @@ def prefill(params: Dict, cfg: ModelConfig, be: Policy, tokens: jax.Array,
             if cfg.shared_attn_every:
                 skv = (_ring_pad(skv[0], W, cfg.compute_dtype),
                        _ring_pad(skv[1], W, cfg.compute_dtype))
-            # mamba with state capture
+            # mamba over the whole prompt as ONE chunk of the serving
+            # recurrence (ssm.paged_step from a zero carry) — the carry
+            # left behind is bit-identical to any other chunking of the
+            # same tokens, which is what makes the paged engine's
+            # chunked prefill and recompute-resume exact against this
+            # wave path at temperature 0
             h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
-            y, st = _mamba_prefill(blk["mixer"], h, be, cfg)
+            y, st = S.paged_step(blk["mixer"], h, be, cfg, zero)
             return x + y, (st, skv)
         x, (states, skvs) = lax.scan(body, x, (params["blocks"], idxs))
         conv_states, ssm_states = states
@@ -396,35 +401,6 @@ def prefill(params: Dict, cfg: ModelConfig, be: Policy, tokens: jax.Array,
     x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
     logits = _unembed(params, cfg, x, be)[:, 0]
     return logits, cache
-
-
-def _mamba_prefill(p, h, be, cfg):
-    """Mamba forward that also returns (conv_state, ssm_state)."""
-    from repro.kernels import ref as R
-    s = cfg.ssm
-    B, Ssz, d = h.shape
-    di, N, nh, P = cfg.d_inner, s.d_state, cfg.ssm_heads, s.head_dim
-    z, xs, Bm, Cm, dt = S._project(p, h, cfg, be)
-    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
-    A = -jnp.exp(p["A_log"])
-    conv_out = jax.nn.silu(S._causal_conv(conv_in, p["conv_w"], p["conv_b"]))
-    xs_c = conv_out[..., :di].reshape(B, Ssz, nh, P)
-    B_c = conv_out[..., di:di + N].reshape(B, Ssz, 1, N)
-    C_c = conv_out[..., di + N:].reshape(B, Ssz, 1, N)
-    dt_c = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
-    y, h_final = R.ref_ssd(xs_c, dt_c, A, B_c, C_c, D_skip=p["D"],
-                           chunk=s.chunk, return_state=True)
-    y = y.astype(jnp.float32).reshape(B, Ssz, di)
-    y = rmsnorm((y.astype(h.dtype)
-                 * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)),
-                p["norm_w"], cfg.norm_eps)
-    out = mm(y, p["out_proj"], be)
-    Kc = s.d_conv - 1
-    conv_state = conv_in[:, -Kc:].astype(h.dtype)
-    if Ssz < Kc:
-        conv_state = jnp.pad(conv_in, ((0, 0), (Kc - Ssz, 0), (0, 0))) \
-            .astype(h.dtype)
-    return out, (conv_state, h_final)
 
 
 def decode(params: Dict, cfg: ModelConfig, be: Policy, tokens: jax.Array,
@@ -476,54 +452,170 @@ def decode(params: Dict, cfg: ModelConfig, be: Policy, tokens: jax.Array,
 
 
 # --------------------------------------------------------------------------
-# Paged KV (serving): block-pool cache + one step fn for chunked
-# prefill AND slot decode.
+# Paged serving (every family): block-pool KV + per-slot recurrent
+# carries, one pytree threaded through chunked prefill AND slot decode.
 # --------------------------------------------------------------------------
 
-def paged_supported(cfg: ModelConfig) -> bool:
-    """The paged path covers the pure-attention families; SSM/hybrid
-    state and the shared-attn block keep using the wave engine."""
-    return cfg.family in ("dense", "moe", "vlm") \
-        and not cfg.shared_attn_every
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedState:
+    """Device-side serving state for one PagedEngine instance.
+
+    Attention K/V live in block pools indexed through block tables
+    (token-proportional, block-granular, see repro.serve.paged);
+    recurrent carries live in per-SLOT rows — fixed-size, allocated for
+    the slot's lifetime, never per token.  Hybrid models add dedicated
+    pools for the weight-shared attention block, one pool row per
+    application.  Which request owns which slot row is host-side state
+    (:class:`repro.serve.paged.SlotStateStore`)."""
+    attn_k: Optional[jax.Array] = None    # (L, P, Hkv, BS, hd)
+    attn_v: Optional[jax.Array] = None
+    conv: Optional[jax.Array] = None      # (L, slots, K-1, ch)
+    ssm: Optional[jax.Array] = None       # (L, slots, nh, Phd, N) f32
+    shared_k: Optional[jax.Array] = None  # (napps, P, Hkv, BS, hd)
+    shared_v: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        return ((self.attn_k, self.attn_v, self.conv, self.ssm,
+                 self.shared_k, self.shared_v), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
 
 
-def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16):
-    """Per-layer block pools, stacked: (L, P, Hkv, BS, hd) x2.  Block 0
-    is the null sink (see repro.serve.paged) — zero-init keeps it
-    finite for the masked reads inactive slots discard."""
-    if not paged_supported(cfg):
-        raise ValueError(f"paged KV unsupported for family={cfg.family} "
-                         f"shared_attn_every={cfg.shared_attn_every}")
+def init_paged_state(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     slots: int, dtype=jnp.bfloat16) -> PagedState:
+    """Zero serving state; block 0 of every pool is the null sink (see
+    repro.serve.paged) — zero-init keeps it finite for the masked reads
+    inactive slots discard.  Slot rows start zero and are re-zeroed
+    inside the jit'd prefill step whenever a chunk starts at position 0
+    (fresh admission or recompute-resume)."""
     Hkv, hd = cfg.n_kv_heads_padded, cfg.head_dim_
-    shape = (cfg.n_layers, num_blocks, Hkv, block_size, hd)
-    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+    pool = (num_blocks, Hkv, block_size, hd)
+    kw: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        kw["attn_k"] = jnp.zeros((cfg.n_layers,) + pool, dtype)
+        kw["attn_v"] = jnp.zeros((cfg.n_layers,) + pool, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        conv1, h1 = S.init_paged_state(cfg, slots, dtype)
+        kw["conv"] = jnp.zeros((cfg.n_layers,) + conv1.shape, conv1.dtype)
+        kw["ssm"] = jnp.zeros((cfg.n_layers,) + h1.shape, h1.dtype)
+    if cfg.shared_attn_every:
+        na = _n_shared_apps(cfg)
+        kw["shared_k"] = jnp.zeros((na,) + pool, dtype)
+        kw["shared_v"] = jnp.zeros((na,) + pool, dtype)
+    return PagedState(**kw)
 
 
-def paged_step(params: Dict, cfg: ModelConfig, be: Policy,
-               tokens: jax.Array, k_pools: jax.Array, v_pools: jax.Array,
-               block_tables: jax.Array, pos_start: jax.Array
-               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One paged step: tokens (B, C) at absolute positions
-    ``pos_start[b] + [0..C)``, K/V written through ``block_tables``
-    (B, nmax), attention read back through the same tables.
+def _paged_core(params, cfg: ModelConfig, be: Policy, x, ps: PagedState,
+                conv, ssm_h, block_tables, qpos, seg_len, active,
+                decode_from=None):
+    """Layer stack shared by paged prefill chunks and slot decode.
+    ``conv``/``ssm_h`` are (L, B, ...) rows aligned with x's batch dim
+    (callers slice/scatter the slot rows); K/V route through
+    ``block_tables`` into the pools; ``decode_from`` (B,) marks the
+    original decode boundary so recompute-resume chunks replay those
+    rows with decode numerics (see layers.paged_attend).  Returns
+    (logits, ps-with-new-pools, conv', ssm')."""
+    idxs = jnp.arange(cfg.n_layers)
+    if cfg.family in ("ssm", "hybrid"):
+        def body(carry, xs):
+            x, sk, sv = carry
+            blk, i, cv, hh = xs
+            if cfg.shared_attn_every:
+                app = i // cfg.shared_attn_every
 
-    C > 1 is a prefill chunk (rows are causal within the chunk via the
-    position mask); C == 1 is a slot-level decode step — one code path,
-    two jit specialisations.  Returns (logits (B, C, Vp), k_pools,
-    v_pools)."""
+                def apply(x, sk, sv):
+                    y, _, kv = _apply_attn_block(
+                        params["shared"], x, be, cfg, i,
+                        paged_kv=(sk[app], sv[app], block_tables, qpos,
+                                  decode_from))
+                    return y, sk.at[app].set(kv[0]), sv.at[app].set(kv[1])
+
+                x, sk, sv = lax.cond(i % cfg.shared_attn_every == 0,
+                                     apply, lambda x, sk, sv: (x, sk, sv),
+                                     x, sk, sv)
+            h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+            y, (cv, hh) = S.paged_step(blk["mixer"], h, be, cfg, (cv, hh),
+                                       seg_len=seg_len, active=active)
+            return (x + y, sk, sv), (cv, hh)
+        (x, sk, sv), (conv_new, ssm_new) = lax.scan(
+            body, (x, ps.shared_k, ps.shared_v),
+            (params["blocks"], idxs, conv, ssm_h))
+        ps = dataclasses.replace(ps, shared_k=sk, shared_v=sv)
+    else:
+        def body(carry, xs):
+            x = carry
+            blk, i, kp, vp = xs
+            x, _, kv = _apply_attn_block(
+                blk, x, be, cfg, i,
+                paged_kv=(kp, vp, block_tables, qpos, decode_from))
+            return x, kv
+        x, (kps, vps) = lax.scan(body, x, (params["blocks"], idxs,
+                                           ps.attn_k, ps.attn_v))
+        ps = dataclasses.replace(ps, attn_k=kps, attn_v=vps)
+        conv_new = ssm_new = None
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x, be), ps, conv_new, ssm_new
+
+
+def paged_prefill(params: Dict, cfg: ModelConfig, be: Policy,
+                  tokens: jax.Array, ps: PagedState, block_tables,
+                  pos_start, slot, seg_len,
+                  n_prompt) -> Tuple[jax.Array, PagedState]:
+    """One prefill chunk for ONE request occupying ``slot``: tokens
+    (1, C) at absolute positions ``pos_start[0] + [0..C)`` (the tail
+    past ``seg_len`` is padding and advances nothing), block_tables
+    (1, nmax).  ``n_prompt`` is the request's prompt length: rows at
+    positions >= n_prompt only exist on recompute-resume (they replay
+    tokens the reference timeline generated by decode) and take the
+    decode-path attention numerics so the rebuilt K/V and recurrent
+    carries are bitwise what an unpreempted run would hold.
+
+    When ``pos_start == 0`` — fresh admission OR recompute-resume after
+    preemption — the slot's recurrent-carry rows are zero-reset inside
+    this jit step, so state reset happens in automatic lockstep with
+    the scheduler rewinding ``pos`` to 0; there is no separate host
+    reset call to forget.  Returns (logits (1, C, Vp), ps)."""
     x = _embed_tokens(params, cfg, tokens, be)
     B, C, _ = x.shape
-    qpos = pos_start[:, None] + jnp.arange(C)[None, :]        # (B, C)
-    idxs = jnp.arange(cfg.n_layers)
+    qpos = pos_start[:, None] + jnp.arange(C)[None, :]        # (1, C)
+    seg = jnp.full((B,), seg_len, jnp.int32)
+    dfrom = jnp.full((B,), n_prompt, jnp.int32)
+    conv = ssm_h = None
+    if cfg.family in ("ssm", "hybrid"):
+        conv = lax.dynamic_slice_in_dim(ps.conv, slot, 1, axis=1)
+        ssm_h = lax.dynamic_slice_in_dim(ps.ssm, slot, 1, axis=1)
+        fresh = pos_start[0] == 0
+        conv = jnp.where(fresh, jnp.zeros_like(conv), conv)
+        ssm_h = jnp.where(fresh, jnp.zeros_like(ssm_h), ssm_h)
+    logits, ps, conv_new, ssm_new = _paged_core(
+        params, cfg, be, x, ps, conv, ssm_h, block_tables, qpos, seg,
+        None, dfrom)
+    if conv_new is not None:
+        ps = dataclasses.replace(
+            ps,
+            conv=lax.dynamic_update_slice_in_dim(ps.conv, conv_new,
+                                                 slot, axis=1),
+            ssm=lax.dynamic_update_slice_in_dim(ps.ssm, ssm_new,
+                                                slot, axis=1))
+    return logits, ps
 
-    def body(carry, xs):
-        x = carry
-        blk, i, kp, vp = xs
-        x, _, kv = _apply_attn_block(
-            blk, x, be, cfg, i, paged_kv=(kp, vp, block_tables, qpos))
-        return x, kv
-    x, (kps, vps) = lax.scan(body, x, (params["blocks"], idxs,
-                                       k_pools, v_pools))
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    return _unembed(params, cfg, x, be), kps, vps
+
+def paged_decode(params: Dict, cfg: ModelConfig, be: Policy,
+                 tokens: jax.Array, ps: PagedState, block_tables, pos,
+                 active) -> Tuple[jax.Array, PagedState]:
+    """One slot-level decode step over ALL slots: tokens (slots, 1),
+    pos (slots,), active (slots,) bool.  Inactive rows (idle slots,
+    slots mid-prefill) read/write the null block through their all-zero
+    table row and keep their recurrent carries bitwise unchanged (see
+    ssm.paged_step).  Returns (logits (slots, 1, Vp), ps)."""
+    x = _embed_tokens(params, cfg, tokens, be)
+    qpos = pos[:, None] + jnp.arange(x.shape[1])[None, :]     # (slots, 1)
+    logits, ps, conv_new, ssm_new = _paged_core(
+        params, cfg, be, x, ps, ps.conv, ps.ssm, block_tables, qpos,
+        None, active)
+    if conv_new is not None:
+        ps = dataclasses.replace(ps, conv=conv_new, ssm=ssm_new)
+    return logits, ps

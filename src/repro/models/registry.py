@@ -23,10 +23,16 @@ class Model:
     prefill: Callable                 # (params, batch, be) -> (logits, cache)
     decode: Callable                  # (params, batch, cache, be) -> (logits, cache)
     init_cache: Callable              # (batch, seq_len) -> cache
-    # paged-KV serving path (repro.serve.PagedEngine); None when the
-    # family needs recurrent state the block pool doesn't carry
-    paged_step: Optional[Callable] = None   # (params, batch, pcache, be)
-    init_paged_cache: Optional[Callable] = None  # (nblocks, bs, dtype)
+    # paged serving path (repro.serve.PagedEngine): block-pool KV plus
+    # per-slot recurrent carries, so EVERY decoder-only family serves
+    # paged; None only for encoder-decoder archs
+    paged_prefill: Optional[Callable] = None
+    # ^ (params, batch, ps, tables, pos0, slot, seg_len, n_prompt, be)
+    #   -> (logits, ps)
+    paged_decode: Optional[Callable] = None
+    # ^ (params, batch, ps, tables, pos, active, be) -> (logits, ps)
+    init_paged_state: Optional[Callable] = None
+    # ^ (num_blocks, block_size, slots, dtype) -> lm.PagedState
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -67,18 +73,19 @@ def build(cfg: ModelConfig) -> Model:
                              prefill_len=seq_len if prefill_len is None
                              else prefill_len)
 
-    pstep = mk_paged = None
-    if lm.paged_supported(cfg):
-        def pstep(params, batch, pcache, be):
-            k_pools, v_pools, tables, pos = pcache
-            logits, k_pools, v_pools = lm.paged_step(
-                params, cfg, be, batch["tokens"], k_pools, v_pools,
-                tables, pos)
-            return logits, (k_pools, v_pools)
+    def ppf(params, batch, ps, tables, pos0, slot, seg_len, n_prompt, be):
+        return lm.paged_prefill(params, cfg, be, batch["tokens"], ps,
+                                tables, pos0, slot, seg_len, n_prompt)
 
-        def mk_paged(num_blocks, block_size, dtype=jnp.bfloat16):
-            return lm.init_paged_cache(cfg, num_blocks, block_size, dtype)
+    def pdec(params, batch, ps, tables, pos, active, be):
+        return lm.paged_decode(params, cfg, be, batch["tokens"], ps,
+                               tables, pos, active)
+
+    def mk_ps(num_blocks, block_size, slots, dtype=jnp.bfloat16):
+        return lm.init_paged_state(cfg, num_blocks, block_size, slots,
+                                   dtype)
 
     return Model(cfg, lambda key: lm.init_lm(key, cfg),
                  lambda: lm.lm_specs(cfg), fwd, pf, dec, mk_cache,
-                 paged_step=pstep, init_paged_cache=mk_paged)
+                 paged_prefill=ppf, paged_decode=pdec,
+                 init_paged_state=mk_ps)

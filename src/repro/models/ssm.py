@@ -1,8 +1,14 @@
 """Mamba-2 block (SSD) — attention-free sequence mixing.
 
-Train/prefill runs the chunked SSD (Pallas kernel or jnp oracle); decode
-runs the O(1)-state recurrence.  The short causal conv is implemented as
-``d_conv`` shifted adds (compiles everywhere, no conv primitive needed).
+Training runs the chunked SSD (Pallas kernel or jnp oracle).  Every
+serving path — wave prefill, wave decode, paged prefill chunks, paged
+slot decode — runs ONE chunked recurrence with an explicit carry
+(:func:`paged_step`), so the paged engine is token-identical to the
+wave oracle by construction: the recurrent state after any token t is
+the same bit pattern no matter how the tokens were chunked, which is
+what makes recompute-resume after preemption exact at temperature 0.
+The short causal conv is implemented as ``d_conv`` shifted adds
+(compiles everywhere, no conv primitive needed).
 """
 from __future__ import annotations
 
@@ -68,12 +74,19 @@ def _causal_conv(x, w, b):
     return out + b[None, None, :]
 
 
-def _conv_step(conv_state, x_t, w, b):
-    """conv_state: (B, K-1, ch); x_t: (B, ch). Returns (state, y_t)."""
-    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,ch)
-    y = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32),
+def _conv_chunk(conv_state, x, w, b):
+    """Causal conv over a chunk with explicit left context.
+
+    conv_state: (B, K-1, ch) — the last K-1 inputs before this chunk;
+    x: (B, C, ch).  Returns per-position outputs (B, C, ch) in the
+    serving numerics (f32 window einsum + bias, cast back)."""
+    K = w.shape[0]
+    C = x.shape[1]
+    full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    win = jnp.stack([full[:, i:i + C] for i in range(K)], axis=2)
+    y = jnp.einsum("btkc,kc->btc", win.astype(jnp.float32),
                    w.astype(jnp.float32)) + b.astype(jnp.float32)
-    return full[:, 1:], y.astype(x_t.dtype)
+    return y.astype(x.dtype)
 
 
 def _project(p, x, cfg: ModelConfig, be: Policy):
@@ -91,31 +104,17 @@ def mamba(p: Dict, x, be: Policy, cfg: ModelConfig,
 
     When ``state`` is given (decode, S==1) returns (y, new_state) where
     state = (conv_state, ssm_h)."""
+    if state is not None:
+        # decode (S == 1) is just a one-token chunk of the serving
+        # recurrence — same code path as prefill chunks, exact resume
+        return paged_step(p, x, be, cfg, state)
+
     s = cfg.ssm
     B, S, d = x.shape
     di, N, nh, P = cfg.d_inner, s.d_state, cfg.ssm_heads, s.head_dim
     z, xs, Bm, Cm, dt = _project(p, x, cfg, be)
     conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
     A = -jnp.exp(p["A_log"])
-
-    if state is not None:
-        conv_state, h = state
-        conv_state, conv_out = _conv_step(conv_state, conv_in[:, 0],
-                                          p["conv_w"], p["conv_b"])
-        conv_out = jax.nn.silu(conv_out)
-        xs_c = conv_out[:, :di].reshape(B, nh, P)
-        B_c = conv_out[:, di:di + N]
-        C_c = conv_out[:, di + N:]
-        dt_c = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
-                               + p["dt_bias"][None, :])
-        h, y = ref.ref_ssd_decode_step(
-            h, xs_c.astype(jnp.float32), dt_c, A,
-            B_c.astype(jnp.float32), C_c.astype(jnp.float32))
-        y = y + p["D"][None, :, None] * xs_c.astype(jnp.float32)
-        y = y.reshape(B, 1, di).astype(x.dtype)
-        y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
-                    p["norm_w"], cfg.norm_eps)
-        return mm(y, p["out_proj"], be), (conv_state, h)
 
     conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
     conv_out = constrain(conv_out, "batch", None, "inner")
@@ -138,3 +137,91 @@ def mamba(p: Dict, x, be: Policy, cfg: ModelConfig,
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
                 p["norm_w"], cfg.norm_eps)
     return mm(y, p["out_proj"], be)
+
+
+# --------------------------------------------------------------------------
+# Serving recurrence (paged engine + wave oracle share this path).
+# --------------------------------------------------------------------------
+
+def init_paged_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """Zero recurrent carry for ONE mamba layer and ``batch`` rows (one
+    row per engine slot): (conv carry (batch, d_conv-1, ch), SSM state
+    (batch, nh, P, N) in f32).  Fixed-size per row — slot-lifetime, not
+    token-proportional."""
+    s = cfg.ssm
+    ch = cfg.d_inner + 2 * s.d_state
+    conv = jnp.zeros((batch, s.d_conv - 1, ch), dtype)
+    h = jnp.zeros((batch, cfg.ssm_heads, s.head_dim, s.d_state),
+                  jnp.float32)
+    return conv, h
+
+
+def paged_step(p: Dict, x, be: Policy, cfg: ModelConfig, state: Tuple,
+               *, seg_len=None, active=None):
+    """One mamba layer over a token chunk with an explicit carry — THE
+    serving-path numerics.  x: (B, C, d); state = (conv_state
+    (B, K-1, ch), h (B, nh, P, N)).
+
+    ``seg_len`` (B,) marks how many of the C positions are real tokens
+    (a prefill chunk's tail past the prompt is padding); ``active`` (B,)
+    masks rows whose carry must not move (idle / mid-prefill slots
+    sharing the decode batch).  Masked positions advance NEITHER the
+    conv carry (the new carry is the last K-1 *valid* inputs) NOR the
+    SSM state (dt is zeroed, so exp(dt*A) = 1 and the input term
+    vanishes), and both are additionally re-selected through
+    ``jnp.where`` so inactive rows are bitwise untouched.
+
+    Each valid token undergoes exactly the ops of the one-token decode
+    step, so chunking is invisible to the carry: prefill(prompt) then
+    decode(k tokens) leaves the same state bits as one prefill over
+    prompt+k — the property the recompute-resume parity tests pin down.
+    Returns (y (B, C, d), (conv_state', h'))."""
+    s = cfg.ssm
+    B, C, _ = x.shape
+    di, N, nh, P = cfg.d_inner, s.d_state, cfg.ssm_heads, s.head_dim
+    conv_state, h = state
+    if seg_len is None:
+        seg_len = jnp.full((B,), C, jnp.int32)
+    if active is None:
+        active = jnp.ones((B,), bool)
+    z, xs, Bm, Cm, dt = _project(p, x, cfg, be)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)          # (B, C, ch)
+    A = -jnp.exp(p["A_log"])
+    conv_out = jax.nn.silu(_conv_chunk(conv_state, conv_in,
+                                       p["conv_w"], p["conv_b"]))
+    xs_c = conv_out[..., :di].reshape(B, C, nh, P)
+    B_c = conv_out[..., di:di + N]                            # (B, C, N)
+    C_c = conv_out[..., di + N:]
+    dt_c = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"][None, None, :])     # (B, C, nh)
+    valid = (jnp.arange(C)[None, :] < seg_len[:, None]) \
+        & active[:, None]                                     # (B, C)
+    dt_m = jnp.where(valid[..., None], dt_c, 0.0)
+
+    def step(hc, xs_t):
+        xt, dtt, Bt, Ct = xs_t
+        hc, y_t = ref.ref_ssd_decode_step(hc, xt, dtt, A, Bt, Ct)
+        return hc, y_t
+
+    h_new, ys = lax.scan(step, h, (
+        xs_c.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt_m.transpose(1, 0, 2),
+        B_c.transpose(1, 0, 2).astype(jnp.float32),
+        C_c.transpose(1, 0, 2).astype(jnp.float32)))
+    y = ys.transpose(1, 0, 2, 3)                              # (B, C, nh, P)
+    y = y + p["D"][None, None, :, None] * xs_c.astype(jnp.float32)
+    y = y.reshape(B, C, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm_w"], cfg.norm_eps)
+    out = mm(y, p["out_proj"], be)
+    # conv carry: rows [seg_len, seg_len + K-1) of [carry ; chunk] are
+    # the last K-1 inputs at or before the segment end
+    Kc = s.d_conv - 1
+    full = jnp.concatenate([conv_state.astype(conv_in.dtype), conv_in],
+                           axis=1)
+    idx = seg_len[:, None] + jnp.arange(Kc)[None, :]          # (B, Kc)
+    conv_new = jnp.take_along_axis(full, idx[..., None], axis=1)
+    conv_new = jnp.where(active[:, None, None],
+                         conv_new.astype(conv_state.dtype), conv_state)
+    h_new = jnp.where(active[:, None, None, None], h_new, h)
+    return out, (conv_new, h_new)

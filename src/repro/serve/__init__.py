@@ -1,18 +1,20 @@
 """repro.serve — serving engines over the IAAT-routed model stack.
 
-:class:`PagedEngine` (default): paged KV cache + slot-level continuous
-batching (mid-flight admission, chunked prefill, device-side sampling,
-preempt-on-exhaustion).  :class:`ContinuousBatcher`: the wave-based
-reference implementation and SSM/hybrid fallback.
+:class:`PagedEngine` (the only production engine): paged KV cache +
+per-slot recurrent state + slot-level continuous batching (mid-flight
+admission, chunked prefill, device-side sampling,
+preempt-on-exhaustion) for every decoder-only family.
+:class:`ContinuousBatcher`: the wave-based reference, retired to
+tests/benchmarks as the temperature-0 parity oracle.
 """
 from repro.serve.engine import (ContinuousBatcher, PagedEngine, Request,
                                 make_serve_fns, sample)
 from repro.serve.paged import (BlockAllocator, BlockTable, CacheMap,
-                               OutOfBlocks)
+                               OutOfBlocks, SlotStateStore)
 from repro.serve.sched import Seq, SlotScheduler
 
 __all__ = [
     "ContinuousBatcher", "PagedEngine", "Request", "make_serve_fns",
     "sample", "BlockAllocator", "BlockTable", "CacheMap", "OutOfBlocks",
-    "Seq", "SlotScheduler",
+    "SlotStateStore", "Seq", "SlotScheduler",
 ]

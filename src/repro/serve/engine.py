@@ -7,7 +7,8 @@ at construction (installed for the whole serving session — not re-entered
 per projection); ``Policy(backend="tuned")`` routes those decode GEMMs
 and the MoE expert FFN by the measured DeviceProfile.
 
-:class:`PagedEngine` is the production loop: a block/paged KV cache
+:class:`PagedEngine` is the production loop for EVERY decoder-only
+family: a block/paged KV cache plus per-slot recurrent state
 (:mod:`repro.serve.paged`), slot-level admission/eviction/preemption
 (:mod:`repro.serve.sched`), chunked prefill interleaved with decode,
 sampling fused into the jit'd decode step, and asynchronous token
@@ -17,9 +18,10 @@ tuned kernels.
 
 :class:`ContinuousBatcher` is the wave-based reference implementation:
 a wave shares one padded prefill and slots only refill between waves.
-It remains as the parity baseline (``slots=1`` is exact unbatched
-generation) and the fallback for the SSM/hybrid families the paged
-cache does not carry state for.
+It is NOT a production path any more — it survives as the parity
+oracle (``slots=1`` is exact unbatched generation, what the paged
+differential tests compare against) and for engine-vs-engine
+benchmarking in ``benchmarks/serve_stream.py``.
 
 Every request is traced through :mod:`repro.obs`: admission wait, time
 to first token, end-to-end latency (all measured from ``submit``),
@@ -42,7 +44,7 @@ from repro import api, obs
 from repro.api import Policy
 from repro.models.registry import Model
 from repro.serve import sched
-from repro.serve.paged import CacheMap, OutOfBlocks
+from repro.serve.paged import CacheMap, OutOfBlocks, SlotStateStore
 
 
 def make_serve_fns(model: Model, be: Optional[Policy] = None):
@@ -92,19 +94,20 @@ class PagedEngine:
     (sampling on device, tokens drained asynchronously every
     ``drain_every`` steps), and run ONE prefill chunk for the oldest
     prefilling request — so a long prompt never stalls ongoing decode.
-    Block exhaustion preempts the youngest sequence (blocks released,
-    generated tokens kept, re-queued at the front; resume re-prefills
-    prompt+generated)."""
+    Block exhaustion preempts the youngest sequence (blocks AND its
+    slot-state row released, generated tokens kept, re-queued at the
+    front; resume re-prefills prompt+generated, which rebuilds the
+    recurrent carry from zero inside the jit'd prefill step)."""
 
     def __init__(self, model: Model, params, be: Optional[Policy] = None,
                  *, slots: int = 4, max_len: int = 256, eos: int = 2,
                  temperature: float = 0.0, seed: int = 0,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  chunk: int = 32, drain_every: int = 4):
-        if model.paged_step is None:
+        if model.paged_decode is None:
             raise ValueError(
                 f"{model.cfg.name}: family {model.cfg.family!r} has no "
-                "paged decode path — use ContinuousBatcher")
+                "paged serving path")
         be = be if be is not None else api.current_policy()
         self.model, self.params, self.be = model, params, be
         self.slots, self.max_len, self.eos = slots, max_len, eos
@@ -117,33 +120,36 @@ class PagedEngine:
         if num_blocks is None:
             num_blocks = 1 + slots * (table_len // block_size)
         self.cache = CacheMap(num_blocks, block_size, table_len)
-        self.scheduler = sched.SlotScheduler(self.cache, slots)
+        self.state = SlotStateStore(slots)
+        self.scheduler = sched.SlotScheduler(self.cache, slots, self.state)
         self.done: Dict[int, List[int]] = {}
         dtype = model.cfg.compute_dtype
-        self._kp, self._vp = model.init_paged_cache(
-            num_blocks, block_size, dtype)
+        self._ps = model.init_paged_state(num_blocks, block_size, slots,
+                                          dtype)
         self._cur = jnp.zeros((slots,), jnp.int32)
         # (token_array, [(seq, slot)]) per issued decode step, drained
         # in order; holding the arrays (instead of np.asarray per step)
         # is what lets device steps pipeline
         self._pending: List[tuple] = []
 
-        def _decode(p, cur, kp, vp, bt, pos, k):
-            logits, (kp, vp) = model.paged_step(
-                p, {"tokens": cur[:, None]}, (kp, vp, bt, pos), be)
+        def _decode(p, cur, ps, bt, pos, active, k):
+            logits, ps = model.paged_decode(
+                p, {"tokens": cur[:, None]}, ps, bt, pos, active, be)
             k, sub = jax.random.split(k)
             nxt = sample(logits[:, -1], sub, temperature)
-            return nxt.astype(jnp.int32), kp, vp, k
+            return nxt.astype(jnp.int32), ps, k
 
-        def _prefill(p, toks, kp, vp, bt, pos0, last_idx):
-            logits, (kp, vp) = model.paged_step(
-                p, {"tokens": toks}, (kp, vp, bt, pos0), be)
+        def _prefill(p, toks, ps, bt, pos0, slot, seg_len, n_prompt,
+                     last_idx):
+            logits, ps = model.paged_prefill(
+                p, {"tokens": toks}, ps, bt, pos0, slot, seg_len,
+                n_prompt, be)
             row = jax.lax.dynamic_index_in_dim(logits[0], last_idx,
                                                axis=0, keepdims=False)
-            return row, kp, vp
+            return row, ps
 
-        self._decode_fn = jax.jit(_decode, donate_argnums=(2, 3))
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=(2, 3))
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(2,))
 
     # -- API (mirrors ContinuousBatcher) -----------------------------------
 
@@ -249,12 +255,14 @@ class PagedEngine:
     def _issue_decode(self, dec: List[sched.Seq]) -> None:
         bt = np.zeros((self.slots, self.cache.nmax), np.int32)
         pos = np.zeros((self.slots,), np.int32)
+        act = np.zeros((self.slots,), bool)
         for q in dec:
             bt[q.slot] = self.cache.row(q.rid)
             pos[q.slot] = q.pos
-        self._cur, self._kp, self._vp, self.key = self._decode_fn(
-            self.params, self._cur, self._kp, self._vp,
-            jnp.asarray(bt), jnp.asarray(pos), self.key)
+            act[q.slot] = True
+        self._cur, self._ps, self.key = self._decode_fn(
+            self.params, self._cur, self._ps,
+            jnp.asarray(bt), jnp.asarray(pos), jnp.asarray(act), self.key)
         self._pending.append((self._cur, [(q, q.slot) for q in dec]))
         for q in dec:
             q.pos += 1
@@ -270,10 +278,12 @@ class PagedEngine:
         toks[0, :len(segment)] = segment
         final = (p0 + len(segment)) == len(target)
         last_idx = np.int32(len(segment) - 1)
-        row, self._kp, self._vp = self._prefill_fn(
-            self.params, jnp.asarray(toks), self._kp, self._vp,
+        row, self._ps = self._prefill_fn(
+            self.params, jnp.asarray(toks), self._ps,
             jnp.asarray(self.cache.row(seq.rid)[None]),
-            jnp.asarray([p0], dtype=jnp.int32), last_idx)
+            jnp.asarray([p0], dtype=jnp.int32), np.int32(seq.slot),
+            np.int32(len(segment)), np.int32(len(seq.req.prompt)),
+            last_idx)
         seq.pos = p0 + len(segment)
         obs.counter("serve.prefill_chunks").inc()
         if not final:
@@ -332,9 +342,11 @@ class ContinuousBatcher:
     Simplification vs the paged engine: prompts in one admission wave
     share a prefill call (padded to the longest), ``cache_len`` is
     pre-committed for the whole wave, and slots only refill between
-    waves.  Kept as the reference implementation — ``slots=1`` is exact
-    unbatched generation, the baseline the paged engine's parity test
-    compares against — and as the serving path for SSM/hybrid families."""
+    waves.  Retired from production serving (the launcher only builds
+    :class:`PagedEngine` now); kept as the parity ORACLE — ``slots=1``
+    is exact unbatched generation, the baseline the paged differential
+    suite compares every family against — and for the engine-vs-engine
+    benchmark in ``benchmarks/serve_stream.py``."""
 
     def __init__(self, model: Model, params, be: Optional[Policy] = None,
                  *, slots: int = 4, max_len: int = 256, eos: int = 2,

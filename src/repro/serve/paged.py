@@ -18,11 +18,12 @@ hands out ids ``1 .. num_blocks-1`` only.
 from __future__ import annotations
 
 import collections
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
-__all__ = ["OutOfBlocks", "BlockAllocator", "BlockTable", "CacheMap"]
+__all__ = ["OutOfBlocks", "BlockAllocator", "BlockTable", "CacheMap",
+           "SlotStateStore"]
 
 
 class OutOfBlocks(RuntimeError):
@@ -113,6 +114,70 @@ class BlockTable:
         out = np.zeros((nmax,), np.int32)
         out[:len(self.ids)] = self.ids
         return out
+
+
+class SlotStateStore:
+    """Host-side ledger for the per-slot recurrent-state rows.
+
+    The device arrays themselves (conv carries + SSM state, one
+    fixed-size row per slot) live inside the engine's
+    :class:`repro.models.lm.PagedState`; this class owns WHICH request
+    each row belongs to, in lockstep with block-table release: the
+    scheduler calls :meth:`bind` on admission and :meth:`release` on
+    finish / EOS-eviction / preemption, right next to
+    ``CacheMap.release``.  The zero-reset of a re-bound row happens
+    inside the jit'd prefill step (``pos_start == 0``), so a bind here
+    never races device work and there is no host-side reset to forget.
+
+    Invariants (tested in tests/test_serve_state.py):
+      * a slot is owned by at most one request, a request owns at most
+        one slot;
+      * binding an occupied slot, re-binding a bound request, and
+        releasing a request that holds no slot all raise;
+      * a released slot is immediately rebindable.
+    """
+
+    def __init__(self, slots: int) -> None:
+        if slots < 1:
+            raise ValueError("need >= 1 slot")
+        self.n_slots = slots
+        self._owner: List[Optional[int]] = [None] * slots
+        self._slot_of: Dict[int, int] = {}
+        self.binds = 0
+        self.releases = 0
+
+    @property
+    def bound(self) -> int:
+        return len(self._slot_of)
+
+    def owner(self, slot: int) -> Optional[int]:
+        return self._owner[slot]
+
+    def slot_of(self, rid: int) -> Optional[int]:
+        return self._slot_of.get(rid)
+
+    def bind(self, slot: int, rid: int) -> None:
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range "
+                             f"[0, {self.n_slots})")
+        if self._owner[slot] is not None:
+            raise ValueError(f"slot {slot} already owned by request "
+                             f"{self._owner[slot]}")
+        if rid in self._slot_of:
+            raise ValueError(f"request {rid} already bound to slot "
+                             f"{self._slot_of[rid]}")
+        self._owner[slot] = rid
+        self._slot_of[rid] = slot
+        self.binds += 1
+
+    def release(self, rid: int) -> int:
+        """Unbind ``rid``'s slot row; returns the freed slot."""
+        slot = self._slot_of.pop(rid, None)
+        if slot is None:
+            raise ValueError(f"request {rid} holds no slot row")
+        self._owner[slot] = None
+        self.releases += 1
+        return slot
 
 
 class CacheMap:

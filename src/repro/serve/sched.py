@@ -27,7 +27,7 @@ import dataclasses
 from typing import Deque, Dict, List, Optional
 
 from repro import obs
-from repro.serve.paged import CacheMap
+from repro.serve.paged import CacheMap, SlotStateStore
 
 __all__ = ["QUEUED", "PREFILL", "DECODE", "DONE", "Seq", "SlotScheduler"]
 
@@ -77,8 +77,10 @@ class Seq:
 class SlotScheduler:
     """FIFO admission into free slots; per-slot eviction/preemption."""
 
-    def __init__(self, cache: CacheMap, slots: int) -> None:
+    def __init__(self, cache: CacheMap, slots: int,
+                 state: Optional[SlotStateStore] = None) -> None:
         self.cache = cache
+        self.state = state          # slot-row ownership, lockstep below
         self.n_slots = slots
         self.queue: Deque[Seq] = collections.deque()
         self.slots: List[Optional[Seq]] = [None] * slots
@@ -114,6 +116,8 @@ class SlotScheduler:
             self._stamp += 1
             self.slots[s] = seq
             self.live[seq.rid] = seq
+            if self.state is not None:
+                self.state.bind(s, seq.rid)
             admitted.append(seq)
         return admitted
 
@@ -137,8 +141,11 @@ class SlotScheduler:
     # -- transitions -------------------------------------------------------
 
     def finish(self, seq: Seq) -> None:
-        """EOS or token budget reached: slot and blocks free NOW."""
+        """EOS or token budget reached: slot, blocks AND the slot's
+        recurrent-state row free NOW."""
         self.cache.release(seq.rid)
+        if self.state is not None:
+            self.state.release(seq.rid)
         if seq.slot >= 0:
             self.slots[seq.slot] = None
         self.live.pop(seq.rid, None)
@@ -157,6 +164,8 @@ class SlotScheduler:
         the queue; generated tokens survive in ``seq.out``."""
         assert seq.inflight == 0, "drain before preempting"
         self.cache.release(seq.rid)
+        if self.state is not None:
+            self.state.release(seq.rid)
         if seq.slot >= 0:
             self.slots[seq.slot] = None
         self.live.pop(seq.rid, None)

@@ -136,32 +136,54 @@ def test_scheduler_rejects_never_fitting_request():
 
 
 # --------------------------------------------------------------------------
-# End-to-end parity with the wave reference (shared smoke model).
+# End-to-end parity with the wave reference, over EVERY registry family.
 # --------------------------------------------------------------------------
 
+# one smoke arch per decoder-only family: dense, MoE, VLM, ssm, hybrid —
+# the parity suite runs each so a family can't silently lose its paged
+# path again (the pre-PR regression: ssm/hybrid fell back to the wave)
+PARITY_ARCHS = ("olmo-1b", "moonshot-v1-16b-a3b", "internvl2-2b",
+                "mamba2-780m", "zamba2-7b")
+
+
 @pytest.fixture(scope="module")
-def smoke():
-    cfg = configs.get_smoke("olmo-1b")
-    model = registry.build(cfg)
-    return cfg, model, model.init(KEY)
+def get_model():
+    """Module-cached (cfg, model, params) per arch, shared across the
+    parametrized parity tests so each smoke model inits once."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = configs.get_smoke(arch)
+            model = registry.build(cfg)
+            cache[arch] = (cfg, model, model.init(KEY))
+        return cache[arch]
+
+    return get
+
+
+@pytest.fixture(scope="module")
+def smoke(get_model):
+    return get_model("olmo-1b")
 
 
 def _wave_ref(model, params, prompts, maxnew, eos=-1):
-    """Unbatched wave-engine generations (the exact per-request oracle)."""
-    ref = {}
+    """Unbatched wave-engine generations (the exact per-request oracle).
+    One batcher at slots=1 runs the queue strictly sequentially, so its
+    outputs are the per-request generations free of the wave engine's
+    left-pad batch-composition effects."""
+    b = ContinuousBatcher(model, params, XLA, slots=1, max_len=64, eos=eos)
     for rid, (p, mn) in enumerate(zip(prompts, maxnew)):
-        b = ContinuousBatcher(model, params, XLA, slots=1, max_len=64,
-                              eos=eos)
         b.submit(Request(rid, p, max_new=mn))
-        ref.update(b.run())
-    return ref
+    return b.run()
 
 
-def test_paged_parity_mixed_lengths_mid_decode_admission(smoke):
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_paged_parity_mixed_lengths_mid_decode_admission(get_model, arch):
     """Token-identical to the wave engine at temperature 0 across mixed
     prompt lengths / budgets, with half the requests admitted mid-decode
     of the others."""
-    cfg, model, params = smoke
+    cfg, model, params = get_model(arch)
     rng = np.random.RandomState(1)
     prompts = [rng.randint(0, cfg.vocab, n).astype(np.int32)
                for n in (5, 9, 3, 17, 2)]
@@ -180,10 +202,13 @@ def test_paged_parity_mixed_lengths_mid_decode_admission(smoke):
     assert e.cache.blocks_in_use == 0           # every eviction freed
 
 
-def test_paged_parity_under_preemption(smoke):
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_paged_parity_under_preemption(get_model, arch):
     """A pool too small for both decoders forces preemption; recompute
-    resume keeps the continuation token-identical."""
-    cfg, model, params = smoke
+    resume keeps the continuation token-identical — for the recurrent
+    families this is the carry-rebuild path (prompt rows re-prefill with
+    chunk numerics, replayed generated rows with decode numerics)."""
+    cfg, model, params = get_model(arch)
     obs.reset()
     rng = np.random.RandomState(2)
     prompts = [rng.randint(0, cfg.vocab, 7).astype(np.int32)
@@ -200,6 +225,19 @@ def test_paged_parity_under_preemption(smoke):
     assert e.run() == ref
     assert obs.counter("serve.preemptions").value > 0
     assert e.cache.blocks_in_use == 0
+
+
+def test_no_engine_fallback_for_registry_families():
+    """Every decoder-only registry family builds with a paged serving
+    path; the launcher's ``serve.engine_fallback`` counter (bumped only
+    when a family misses the paged path) must stay 0."""
+    obs.reset()
+    for arch in PARITY_ARCHS:
+        model = registry.build(configs.get_smoke(arch))
+        assert model.paged_prefill is not None, arch
+        assert model.paged_decode is not None, arch
+        assert model.init_paged_state is not None, arch
+    assert obs.counter("serve.engine_fallback").value == 0
 
 
 def test_paged_parity_eos_eviction(smoke):

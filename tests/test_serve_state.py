@@ -1,0 +1,210 @@
+"""Per-slot recurrent state: SlotStateStore invariants, scheduler
+lockstep, masked-decode carry isolation, and property-style
+slot-isolation runs.
+
+The hazard these tests pin down: the paged engine multiplexes MANY
+requests through a FIXED set of slot-state rows (conv carries + SSM
+state), so any bookkeeping slip — a row not zero-reset on reuse, an
+inactive row advanced by a masked decode step, a preempted request
+resuming on a stale carry — silently leaks one request's recurrence
+into another's tokens.  Every end-to-end check therefore compares
+against single-request reference runs (the wave oracle at ``slots=1``),
+where no sharing exists by construction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, obs
+from repro.models import registry
+from repro.models.common import XLA
+from repro.serve import (CacheMap, ContinuousBatcher, PagedEngine, Request,
+                         Seq, SlotScheduler, SlotStateStore)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def get_model():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = configs.get_smoke(arch)
+            model = registry.build(cfg)
+            cache[arch] = (cfg, model, model.init(KEY))
+        return cache[arch]
+
+    return get
+
+
+def _wave_ref(model, params, prompts, maxnew, eos=-1):
+    """Single-request reference runs (slots=1 processes sequentially)."""
+    b = ContinuousBatcher(model, params, XLA, slots=1, max_len=64, eos=eos)
+    for rid, (p, mn) in enumerate(zip(prompts, maxnew)):
+        b.submit(Request(rid, p, max_new=mn))
+    return b.run()
+
+
+# --------------------------------------------------------------------------
+# SlotStateStore invariants (pure host).
+# --------------------------------------------------------------------------
+
+def test_store_bind_release_invariants():
+    with pytest.raises(ValueError):
+        SlotStateStore(0)
+    s = SlotStateStore(2)
+    s.bind(0, 10)
+    with pytest.raises(ValueError):
+        s.bind(0, 11)                   # occupied slot
+    with pytest.raises(ValueError):
+        s.bind(1, 10)                   # request already bound
+    with pytest.raises(ValueError):
+        s.bind(2, 12)                   # slot out of range
+    s.bind(1, 11)
+    assert s.bound == 2
+    assert s.owner(0) == 10 and s.slot_of(11) == 1
+    with pytest.raises(ValueError):
+        s.release(99)                   # releases nothing it never held
+    assert s.release(10) == 0
+    assert s.owner(0) is None and s.slot_of(10) is None
+    s.bind(0, 12)                       # freed slot immediately rebindable
+    assert s.binds == 3 and s.releases == 1
+
+
+def test_scheduler_keeps_store_in_lockstep():
+    """bind on admit, release on finish AND on preempt — always next to
+    the block-table release, never drifting from it."""
+    store = SlotStateStore(2)
+    s = SlotScheduler(CacheMap(9, 4, 16), 2, store)
+    for rid in range(3):
+        s.submit(Seq(Request(rid, np.zeros(3, np.int32), max_new=4)))
+    a, b = s.admit()
+    assert store.owner(a.slot) == a.rid and store.owner(b.slot) == b.rid
+    s.cache.ensure(b.rid, 5)
+    bslot = b.slot
+    s.preempt(b)
+    assert store.owner(bslot) is None
+    assert store.slot_of(b.rid) is None and s.cache.blocks_in_use == 0
+    (c,) = s.admit()                    # preempted seq re-admits, rebinds
+    assert c.rid == b.rid and store.slot_of(c.rid) == c.slot
+    s.finish(a)
+    assert store.slot_of(a.rid) is None
+    assert store.binds == 3 and store.releases == 2
+    assert store.bound == 1             # only the resumed seq remains
+
+
+# --------------------------------------------------------------------------
+# Masked decode: inactive slot rows are bitwise frozen (device).
+# --------------------------------------------------------------------------
+
+def test_masked_decode_freezes_inactive_carries(get_model):
+    """A decode step with a slot masked inactive must leave that slot's
+    conv/ssm rows bitwise unchanged and touch no pool block but the
+    null sink (block 0) — zamba2 exercises both the recurrent rows and
+    the shared-attention pool in one model."""
+    cfg, model, params = get_model("zamba2-7b")
+    slots = 3
+    ps = model.init_paged_state(4, 8, slots)
+    bt = jnp.zeros((slots, 4), jnp.int32)           # all-null tables
+    pos = jnp.zeros((slots,), jnp.int32)
+    toks = {"tokens": jnp.arange(1, slots + 1, dtype=jnp.int32)[:, None]}
+    # one all-active step so the carries are non-zero (a frozen zero
+    # row proves nothing)
+    _, ps1 = model.paged_decode(params, toks, ps, bt, pos,
+                                jnp.ones((slots,), bool), XLA)
+    assert bool(jnp.any(ps1.conv != 0)) and bool(jnp.any(ps1.ssm != 0))
+
+    # all-inactive step: different tokens, nothing may move
+    _, ps2 = model.paged_decode(params, toks, ps1, bt, pos + 1,
+                                jnp.zeros((slots,), bool), XLA)
+    assert bool(jnp.all(ps2.conv == ps1.conv))
+    assert bool(jnp.all(ps2.ssm == ps1.ssm))
+    # writes landed in the null sink only
+    assert bool(jnp.all(ps2.shared_k[:, 1:] == ps1.shared_k[:, 1:]))
+    assert bool(jnp.all(ps2.shared_v[:, 1:] == ps1.shared_v[:, 1:]))
+
+    # mixed step: only the active slot's rows advance
+    act = jnp.array([False, True, False])
+    _, ps3 = model.paged_decode(params, toks, ps2, bt, pos + 1, act, XLA)
+    assert bool(jnp.all(ps3.conv[:, 0] == ps2.conv[:, 0]))
+    assert bool(jnp.all(ps3.conv[:, 2] == ps2.conv[:, 2]))
+    assert bool(jnp.all(ps3.ssm[:, 0] == ps2.ssm[:, 0]))
+    assert bool(jnp.all(ps3.ssm[:, 2] == ps2.ssm[:, 2]))
+    assert bool(jnp.any(ps3.ssm[:, 1] != ps2.ssm[:, 1]))
+
+
+# --------------------------------------------------------------------------
+# Property-style slot isolation (end-to-end vs single-request oracle).
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,seed", [("mamba2-780m", 0),
+                                       ("mamba2-780m", 1),
+                                       ("zamba2-7b", 0)])
+def test_slot_isolation_random_interleaving(get_model, arch, seed):
+    """Random interleavings of admit / decode / budget-evict / preempt
+    (pool sized to exhaust) over shared slots: every request's tokens
+    must equal its single-request reference run — any cross-slot carry
+    leak or stale-row reuse shows up as a token flip."""
+    cfg, model, params = get_model(arch)
+    rng = np.random.RandomState(seed)
+    n = 6
+    prompts = [rng.randint(0, cfg.vocab,
+                           int(rng.randint(2, 20))).astype(np.int32)
+               for _ in range(n)]
+    maxnew = [int(rng.randint(2, 9)) for _ in range(n)]
+    ref = _wave_ref(model, params, prompts, maxnew)
+
+    e = PagedEngine(model, params, XLA, slots=2, max_len=64, eos=-1,
+                    block_size=8, chunk=8, num_blocks=6)
+    e.submit(Request(0, prompts[0], max_new=maxnew[0]))
+    for rid in range(1, n):             # admissions land mid-flight
+        for _ in range(int(rng.randint(0, 5))):
+            e.step()
+        e.submit(Request(rid, prompts[rid], max_new=maxnew[rid]))
+    assert e.run() == ref
+    assert e.state.bound == 0 and e.state.binds == e.state.releases
+    assert e.cache.blocks_in_use == 0
+
+
+def test_slot_isolation_eos_evict_and_reuse(get_model):
+    """EOS-evicted slots hand their state row to the next request; the
+    successor must start from a zero carry, not the evictee's."""
+    cfg, model, params = get_model("mamba2-780m")
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab, p).astype(np.int32)
+               for p in (4, 6, 9, 5)]
+    free = _wave_ref(model, params, prompts, [8, 8, 8, 8])
+    eos = free[0][2]                    # a token that WILL appear
+    ref = _wave_ref(model, params, prompts, [8, 8, 8, 8], eos=eos)
+    assert any(len(v) < 8 for v in ref.values())    # eviction exercised
+
+    e = PagedEngine(model, params, XLA, slots=2, max_len=64, eos=eos,
+                    block_size=8, chunk=8)
+    for rid, p in enumerate(prompts):
+        e.submit(Request(rid, p, max_new=8))
+    assert e.run() == ref
+    assert e.state.bound == 0 and e.state.binds == 4
+
+
+def test_exhaustion_resume_rebuilds_carry(get_model):
+    """Block exhaustion preempts a decoding SSM request (carry row
+    released with the blocks); recompute-resume re-prefills
+    prompt+generated from a zero row and the continuation is
+    token-identical to the never-preempted reference."""
+    cfg, model, params = get_model("mamba2-780m")
+    obs.reset()
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab, 7).astype(np.int32)
+               for _ in range(2)]
+    ref = _wave_ref(model, params, prompts, [10, 10])
+
+    e = PagedEngine(model, params, XLA, slots=2, max_len=24, eos=-1,
+                    block_size=8, chunk=8, num_blocks=4)
+    for rid, p in enumerate(prompts):
+        e.submit(Request(rid, p, max_new=10))
+    assert e.run() == ref
+    assert obs.counter("serve.preemptions").value > 0
+    assert e.state.binds > 2            # at least one resume re-bound
+    assert e.state.bound == 0 and e.cache.blocks_in_use == 0
