@@ -6,6 +6,11 @@ vs off (``obs.set_enabled``).  The log entry doubles as a decision memo
 generation) — so the enabled path is expected to be *faster* on repeat
 shapes, not just within 5%.  The acceptance row reports the relative
 overhead; ``run()`` asserts the gate.
+
+A second comparison (``measure_trace``) prices the flight recorder:
+the same memo-hit loop with ``obs.TRACE`` on vs off, gated at the same
+<5% — on hits the trace ring is never touched, so this is a regression
+tripwire for anyone adding an emit to the hot path.
 """
 from __future__ import annotations
 
@@ -54,6 +59,39 @@ def measure(reps: int = 2000):
     return t_on * 1e6, t_off * 1e6, (t_on - t_off) / t_off
 
 
+def measure_trace(reps: int = 2000, retries: int = 2):
+    """Returns (traced_us, untraced_us, overhead_fraction) per call for
+    the memo-hit routing path with the flight recorder on vs off.
+
+    Obs metrics stay ON both sides — this isolates what *tracing* adds,
+    which on memo hits should be nothing at all: ``ROUTE_MISS`` only
+    fires on the miss path, so the hot repeat-shape loop never touches
+    the ring.  Sub-microsecond timings are noisy, so each side keeps its
+    best over up to ``1 + retries`` rounds before the number is final.
+    """
+    from repro import api, obs
+
+    router = api.Router(api.Policy(backend="auto"))
+    ncalls = reps * len(SHAPES)
+    was_obs, was_trace = obs.enabled(), obs.TRACE.on
+    best_on = best_off = float("inf")
+    try:
+        obs.set_enabled(True)
+        obs.ROUTES.reset()
+        _time_route(router, 50)                       # warm the memo
+        for _ in range(1 + retries):
+            obs.TRACE.set_enabled(True)
+            best_on = min(best_on, _time_route(router, reps) / ncalls)
+            obs.TRACE.set_enabled(False)
+            best_off = min(best_off, _time_route(router, reps) / ncalls)
+            if best_on <= best_off * 1.05:
+                break
+    finally:
+        obs.set_enabled(was_obs)
+        obs.TRACE.set_enabled(was_trace)
+    return best_on * 1e6, best_off * 1e6, (best_on - best_off) / best_off
+
+
 def run(csv_rows) -> None:
     on_us, off_us, over = measure()
     csv_rows.append(("route_overhead/enabled_us", round(on_us, 3), 1))
@@ -61,6 +99,11 @@ def run(csv_rows) -> None:
     csv_rows.append(("route_overhead/overhead_pct", round(over * 100, 1),
                      "gate<5"))
     assert over < 0.05, f"route() obs overhead {over:.1%} >= 5%"
+    t_on_us, t_off_us, t_over = measure_trace()
+    csv_rows.append(("route_overhead/traced_us", round(t_on_us, 3), 1))
+    csv_rows.append(("route_overhead/trace_overhead_pct",
+                     round(t_over * 100, 1), "gate<5"))
+    assert t_over < 0.05, f"route() trace overhead {t_over:.1%} >= 5%"
 
 
 def main() -> None:
@@ -68,6 +111,10 @@ def main() -> None:
     print(f"route() with obs on:  {on_us:.3f} us/call")
     print(f"route() with obs off: {off_us:.3f} us/call")
     print(f"overhead: {over:+.1%} (gate: <5%)")
+    t_on_us, t_off_us, t_over = measure_trace()
+    print(f"route() with trace on:  {t_on_us:.3f} us/call")
+    print(f"route() with trace off: {t_off_us:.3f} us/call")
+    print(f"trace overhead: {t_over:+.1%} (gate: <5%)")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,13 @@ stream several smoke archs (per-model sections land under
 paged rows); ``--gate`` fails the run when any streamed model's paged
 p99 end-to-end latency regresses >20% against the checked-in baseline,
 and ``--record`` appends a trajectory row (the per-PR history
-``benchmarks/run.py --record`` maintains).
+``benchmarks/run.py --record`` maintains).  ``--trace PATH``
+additionally dumps the last paged stream's flight-recorder timeline as
+a Chrome-trace/Perfetto JSON (slots as tracks, requests as
+flow-connected slices) and the per-request reducer's distributions
+(queue wait, TTFT wait-vs-prefill split, decode stall) always land in
+the export as ``serve.trace.*``; ``--trace-gate`` fails the run when
+tracing costs more than 5% paged tokens/s.
 
     PYTHONPATH=src python benchmarks/serve_stream.py --requests 16
     PYTHONPATH=src python benchmarks/serve_stream.py --engine both --gate
@@ -36,6 +42,7 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 GATE_PCT = 20.0     # p99 e2e regression tolerance vs checked-in baseline
+TRACE_GATE_PCT = 5.0    # tokens/s loss tolerance with the flight recorder on
 
 
 def _build_engine(engine, model, params, *, slots, seed):
@@ -149,11 +156,24 @@ def bench(engines, **kw):
     snapshot ``export_bench`` writes — paged last, so the checked-in
     metrics block tracks the default engine)."""
     from repro import obs
+    from repro.obs import trace as trace_mod
     meta, rows = {}, []
     for engine in engines:
         obs.reset()
         m, _, _ = stream(engine=engine, **kw)
-        meta.setdefault("engines", {})[engine] = _summary(m)
+        # fold the flight recorder's per-request reducer into the live
+        # registry BEFORE _summary/export snapshot it, so the derived
+        # serve.trace.* distributions (queue wait, TTFT wait-vs-prefill,
+        # decode stall) land in BENCH_serve.json next to the engine's
+        # own aggregates.  The wave engine doesn't emit trace events, so
+        # its section simply carries no trace block.
+        per = trace_mod.per_request(obs.TRACE.snapshot())
+        if per:
+            trace_mod.observe(per)
+        summ = _summary(m)
+        if per:
+            summ["trace"] = trace_mod.summary(per)
+        meta.setdefault("engines", {})[engine] = summ
         rows.extend(_headline(m, prefix=f"serve_stream[{engine}]"))
         meta.update({k: v for k, v in m.items()
                      if k not in ("engine", "wall_s", "tokens",
@@ -192,6 +212,39 @@ def check_gate(baseline_doc, new_p99: float, model: str | None = None):
     ok = pct <= GATE_PCT
     return ok, (f"gate: {tag}paged e2e p99 {new_p99:.0f}us vs baseline "
                 f"{old:.0f}us ({pct:+.1f}%, limit +{GATE_PCT:.0f}%)")
+
+
+def check_trace_gate(model_name: str = "glm4-9b", retries: int = 2, **kw):
+    """Returns (ok, message) for the tracing-overhead gate: paged
+    tokens/s with the flight recorder ON must be within
+    ``TRACE_GATE_PCT`` of the same stream with it OFF.  A short smoke
+    stream's throughput is noisy (one host hiccup skews either side), so
+    each side keeps its best over up to ``1 + retries`` attempts and the
+    comparison only fails when the traced side loses every time."""
+    from repro import obs
+    was = obs.TRACE.on
+    best = {"on": 0.0, "off": 0.0}
+    attempt = 0
+    try:
+        for attempt in range(1 + retries):
+            for mode in ("off", "on"):
+                obs.reset()
+                obs.TRACE.set_enabled(mode == "on")
+                m, _, _ = stream(engine="paged", model_name=model_name,
+                                 **kw)
+                best[mode] = max(best[mode], m["tokens_per_s"])
+            if best["on"] >= best["off"] * (1 - TRACE_GATE_PCT / 100.0):
+                break
+    finally:
+        obs.TRACE.set_enabled(was)
+        obs.reset()
+    if best["off"] <= 0:
+        return True, "trace-gate: no untraced throughput — skipped"
+    drop = (best["off"] - best["on"]) / best["off"] * 100.0
+    ok = drop <= TRACE_GATE_PCT
+    return ok, (f"trace-gate: paged {best['on']:.1f} tok/s traced vs "
+                f"{best['off']:.1f} untraced ({drop:+.1f}% drop, limit "
+                f"{TRACE_GATE_PCT:.0f}%) [attempts: {attempt + 1}]")
 
 
 def run(csv_rows, record: bool = False) -> None:
@@ -235,6 +288,12 @@ def main() -> None:
                          "BENCH_serve.json")
     ap.add_argument("--no-export", action="store_true",
                     help="print the report without writing BENCH_serve.json")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the last paged stream's flight-recorder "
+                         "timeline as Chrome-trace/Perfetto JSON")
+    ap.add_argument("--trace-gate", action="store_true",
+                    help=f"fail when tracing costs more than "
+                         f"{TRACE_GATE_PCT:.0f}%% paged tokens/s")
     args = ap.parse_args()
 
     # snapshot the checked-in baseline BEFORE the export overwrites it
@@ -262,6 +321,15 @@ def main() -> None:
         for engine, s in m["engines"].items():
             print(f"[{mn}:{engine}] {s['tokens']} tokens in {s['wall_s']}s "
                   f"-> {s['tokens_per_s']} tok/s")
+
+    if args.trace:
+        # the live ring still holds the LAST stream run (paged last when
+        # --engine both) — dump it before the gates re-run anything
+        from repro.obs import trace as trace_mod
+        tpath = trace_mod.write_trace(args.trace, slots=args.slots)
+        print(f"trace: {tpath} ({len(trace_mod.TRACE)} events, "
+              f"{trace_mod.TRACE.dropped} dropped; open in "
+              f"https://ui.perfetto.dev)")
 
     if not args.no_export:
         path = obs.export_bench("serve", meta)
@@ -295,6 +363,10 @@ def main() -> None:
                                      mn)
             print(msg + (f" [retries: {retries}]" if retries else ""))
             failed = failed or not ok
+    if args.trace_gate:
+        ok, msg = check_trace_gate(model_name=models[0], **kw)
+        print(msg)
+        failed = failed or not ok
     if failed:
         sys.exit(1)
 

@@ -252,6 +252,11 @@ class Router:
                 return h[3]
             d = self._decide(op, dims, letter, trans, pol)
             rl.note(key, pol, d)
+            # memo-miss only: the flight recorder sees every NEW shape
+            # (and every recompute after a profile swap) while the hot
+            # repeat-shape path above stays one dict probe
+            obs.TRACE.emit("ROUTE_MISS",
+                           arg=(op, letter, trans, list(key[3]), d.source))
             return d
         return self._decide(op, dims, _letter_of(dtype), trans, pol)
 

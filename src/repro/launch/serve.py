@@ -41,6 +41,9 @@ def main() -> None:
     ap.add_argument("--backend", default="xla",
                     choices=list(api.POLICY_NAMES))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the flight-recorder timeline as a "
+                         "Chrome-trace/Perfetto JSON after the run")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -76,6 +79,12 @@ def main() -> None:
                  done[rid][:8])
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
+    if args.trace:
+        from repro.obs import trace as trace_mod
+        path = trace_mod.write_trace(args.trace, slots=args.slots)
+        print(f"trace: {path} ({len(trace_mod.TRACE)} events, "
+              f"{trace_mod.TRACE.dropped} dropped; open in "
+              f"https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

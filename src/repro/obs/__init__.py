@@ -27,6 +27,7 @@ route log is bypassed with a single attribute check.
 """
 from __future__ import annotations
 
+import collections as _collections
 import json
 import math
 import os
@@ -37,9 +38,10 @@ from typing import Any, Dict, List, Optional, Tuple
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "REGISTRY", "ROUTES",
-    "counter", "gauge", "histogram", "span", "enabled", "set_enabled",
-    "export_bench", "load_bench", "diff_bench", "report_str", "reset",
-    "bench_root", "record_trajectory", "BENCH_SCHEMA_VERSION",
+    "TRACE", "counter", "gauge", "histogram", "span", "enabled",
+    "set_enabled", "export_bench", "load_bench", "diff_bench",
+    "report_str", "reset", "bench_root", "record_trajectory",
+    "BENCH_SCHEMA_VERSION",
 ]
 
 BENCH_SCHEMA_VERSION = 1
@@ -67,10 +69,14 @@ def enabled() -> bool:
 
 def set_enabled(on: bool) -> None:
     """Programmatic kill switch (tests, benchmarks).  Flips the registry,
-    the route log, and spans together so on/off comparisons are fair."""
+    the route log, the flight recorder, and spans together so on/off
+    comparisons are fair.  (The flight recorder can additionally be
+    toggled alone via ``TRACE.set_enabled`` — the trace-overhead gates
+    compare trace-ON vs trace-OFF with metrics ON both times.)"""
     global _ENABLED
     _ENABLED = bool(on)
     ROUTES.on = _ENABLED
+    TRACE.on = _ENABLED
 
 
 # --------------------------------------------------------------------------
@@ -157,9 +163,16 @@ class Histogram:
         return self.total / self.n if self.n else 0.0
 
     def percentile(self, q: float) -> float:
-        """Value at percentile ``q`` in [0, 100], to bucket resolution."""
+        """Value at percentile ``q`` in [0, 100], to bucket resolution.
+        The extremes are exact: q<=0 returns the observed minimum and
+        q>=100 the observed maximum (a ceil'd rank would otherwise pin
+        q=0 to rank 1 and report ~the min *bucket*, not the min)."""
         if self.n == 0:
             return 0.0
+        if q <= 0.0:
+            return self.vmin
+        if q >= 100.0:
+            return self.vmax
         rank = max(1, math.ceil(q / 100.0 * self.n))
         seen = self.zeros
         if rank <= seen:
@@ -293,9 +306,11 @@ def histogram(name: str, **labels) -> Histogram:
 
 
 def reset() -> None:
-    """Clear every metric AND the route log (tests, benchmark isolation)."""
+    """Clear every metric, the route log AND the flight recorder (tests,
+    benchmark isolation)."""
     REGISTRY.reset()
     ROUTES.reset()
+    TRACE.reset()
 
 
 # --------------------------------------------------------------------------
@@ -383,8 +398,18 @@ class RouteLog:
     into the aggregate histogram (per (op, dtype, trans, size-class,
     use_pallas, source, blocks)) and the memo restarts empty — counts are
     never lost, only the memoized Decisions.
+
+    Locking: only the memo-HIT increment (``h[0] += 1`` inline in
+    ``Router.route``) is lock-free — a count lost to that race is
+    acceptable, a torn value impossible.  ``note`` (the miss path),
+    compaction, snapshots and reset all take ``_lock``, so a compaction
+    can never iterate a dict another thread is inserting into
+    ("dict changed size during iteration") or drop a concurrent note.
     """
     CAP = 32768
+    #: windowed() bucket width (seconds) and retention; see below.
+    WINDOW_S = 1.0
+    MAX_WINDOW_BUCKETS = 64
 
     def __init__(self) -> None:
         self.on = _ENABLED
@@ -392,14 +417,20 @@ class RouteLog:
         self.hits: Dict[tuple, list] = {}
         self._agg: Dict[tuple, int] = {}
         self._lock = threading.Lock()
+        # windowed-shape state: closed buckets (t_start, t_end, counts)
+        # newest-first, plus the cumulative snapshot at the last close
+        self._win = _collections.deque(maxlen=self.MAX_WINDOW_BUCKETS)
+        self._win_prev: Dict[tuple, int] = {}
+        self._win_t: Optional[float] = None
 
     # -- hot path (the .get/.note split lives inline in Router.route) ------
 
     def note(self, key: tuple, pol, decision) -> None:
         """First sighting of ``key``: memoize the decision, count = 1."""
-        self.hits[key] = [1, pol, self.gen, decision]
-        if len(self.hits) > self.CAP:
-            self._compact()
+        with self._lock:
+            self.hits[key] = [1, pol, self.gen, decision]
+            if len(self.hits) > self.CAP:
+                self._compact_locked()
 
     def invalidate(self) -> None:
         """Active-profile changed: stale every memoized decision (counts
@@ -425,18 +456,24 @@ class RouteLog:
         cls = "-".join(str(bucket_index(max(1, x))) for x in mnk)
         return (op, letter, trans, cls, d.use_pallas, d.source, d.blocks)
 
+    def _compact_locked(self) -> None:
+        """Fold live entries into the aggregate; caller holds ``_lock``."""
+        for key, h in self.hits.items():
+            ak = self._agg_key(key, h[3])
+            self._agg[ak] = self._agg.get(ak, 0) + h[0]
+        self.hits.clear()
+
     def _compact(self) -> None:
         with self._lock:
-            for key, h in self.hits.items():
-                ak = self._agg_key(key, h[3])
-                self._agg[ak] = self._agg.get(ak, 0) + h[0]
-            self.hits.clear()
+            self._compact_locked()
 
     def histogram(self) -> Dict[tuple, int]:
         """Full-label counts: (op, dtype, trans, size-class, use_pallas,
         source, blocks) -> number of route() calls."""
-        out = dict(self._agg)
-        for key, h in list(self.hits.items()):
+        with self._lock:
+            out = dict(self._agg)
+            live = list(self.hits.items())
+        for key, h in live:
             ak = self._agg_key(key, h[3])
             out[ak] = out.get(ak, 0) + h[0]
         return out
@@ -448,6 +485,65 @@ class RouteLog:
             k = (op, letter, cls)
             out[k] = out.get(k, 0) + n
         return out
+
+    # -- windowed shape observation (the online-tuner feed) ----------------
+
+    def windowed(self, n_buckets: int = 8, *,
+                 bucket_s: Optional[float] = None,
+                 decay: Optional[float] = None,
+                 now: Optional[float] = None):
+        """Time-bucketed shape counts — the input-distribution feed for
+        online traffic-aware tuning (ROADMAP; Tillet's input-aware
+        predictor trains on this, not on the all-time aggregate, so a
+        traffic shift shows up within a bucket instead of being averaged
+        away).
+
+        Buckets are closed at *observation* time: each call diffs the
+        cumulative :meth:`shape_counts` against the snapshot taken at
+        the last bucket close, so recording stays entirely on the
+        existing memo path (zero extra hot-path cost).  A caller polling
+        every ``bucket_s`` seconds (the intended use) gets true
+        fixed-width buckets; a slower poller gets one bucket spanning
+        the gap — honest, never interpolated.
+
+        Returns newest-first: ``[counts_open, counts_1, ...]`` — the
+        open (still-filling) bucket, then up to ``n_buckets - 1`` closed
+        ones; each ``counts`` maps ``(op, dtype, size-class) -> n``.
+        With ``decay`` in (0, 1], the buckets are instead folded into
+        ONE dict of exponentially-decayed weights (bucket *i* weighted
+        ``decay**i``) — the sweep-weighting form the tuner consumes
+        directly.  ``now`` injects a clock for tests.
+        """
+        if n_buckets < 1:
+            raise ValueError("n_buckets must be >= 1")
+        width = bucket_s or self.WINDOW_S
+        t = time.monotonic() if now is None else now
+        cur = self.shape_counts()
+        with self._lock:
+            if self._win_t is None:
+                self._win_t = t
+            elif t - self._win_t >= width:
+                delta = {k: cur[k] - self._win_prev.get(k, 0)
+                         for k in cur
+                         if cur[k] > self._win_prev.get(k, 0)}
+                self._win.appendleft((self._win_t, t, delta))
+                self._win_prev = cur
+                self._win_t = t
+            open_bucket = {k: cur[k] - self._win_prev.get(k, 0)
+                           for k in cur
+                           if cur[k] > self._win_prev.get(k, 0)}
+            buckets = [open_bucket] + [c for (_a, _b, c) in
+                                       list(self._win)[:n_buckets - 1]]
+        if decay is None:
+            return buckets
+        if not 0.0 < decay <= 1.0:
+            raise ValueError("decay must be in (0, 1]")
+        folded: Dict[Tuple[str, str, str], float] = {}
+        for i, counts in enumerate(buckets):
+            w = decay ** i
+            for k, n in counts.items():
+                folded[k] = folded.get(k, 0.0) + w * n
+        return folded
 
     @property
     def total(self) -> int:
@@ -469,10 +565,26 @@ class RouteLog:
         with self._lock:
             self.hits.clear()
             self._agg.clear()
+            self._win.clear()
+            self._win_prev = {}
+            self._win_t = None
             self.gen += 1
 
 
 ROUTES = RouteLog()
+
+
+# --------------------------------------------------------------------------
+# The flight recorder (repro.obs.trace) — event ring + Perfetto export.
+# --------------------------------------------------------------------------
+
+from repro.obs import trace  # noqa: E402  (needs nothing above at import)
+
+#: The process-global per-request event ring (see :mod:`repro.obs.trace`).
+#: Obeys ``REPRO_OBS`` like every other collector; ``REPRO_TRACE=0``
+#: additionally disables just the recorder.
+TRACE = trace.TRACE
+TRACE.on = TRACE.on and _ENABLED
 
 
 # --------------------------------------------------------------------------
@@ -553,16 +665,25 @@ def record_trajectory(name: str, entry: dict, *,
     return out
 
 
+_GIT_HEAD_CACHE: Optional[Tuple[Optional[str]]] = None
+
+
 def _git_head() -> Optional[str]:
-    """Short commit hash of the repo containing this file, or None."""
-    import subprocess
-    try:
-        return subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=pathlib.Path(__file__).resolve().parent, timeout=5,
-            capture_output=True, text=True, check=True).stdout.strip()
-    except Exception:
-        return None
+    """Short commit hash of the repo containing this file, or None.
+    Memoized per process — HEAD cannot move under a running benchmark,
+    and ``record_trajectory`` may be called once per suite."""
+    global _GIT_HEAD_CACHE
+    if _GIT_HEAD_CACHE is None:
+        import subprocess
+        try:
+            head = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=pathlib.Path(__file__).resolve().parent, timeout=5,
+                capture_output=True, text=True, check=True).stdout.strip()
+        except Exception:
+            head = None
+        _GIT_HEAD_CACHE = (head,)
+    return _GIT_HEAD_CACHE[0]
 
 
 def load_bench(path: os.PathLike) -> dict:

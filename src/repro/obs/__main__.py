@@ -1,14 +1,26 @@
 """CLI for the observability layer.
 
     python -m repro.obs                     # summarize BENCH_*.json files
+    python -m repro.obs ls                  # same ("list" also works)
     python -m repro.obs show BENCH_x.json   # pretty-print one BENCH file
     python -m repro.obs diff OLD NEW        # metric deltas between two
     python -m repro.obs report              # live registry of this process
+    python -m repro.obs trace OUT.json      # live flight recorder -> Perfetto
+    python -m repro.obs trace IN OUT.json   # re-export a --trace dump
 
 ``diff`` is the per-PR perf-trajectory tool: run a benchmark on main,
 run it on your branch, diff the two BENCH files.  Exits 0 always — the
 numbers are for humans; regression gates belong in the benchmarks
 themselves.
+
+``trace`` writes a Chrome-trace-event JSON (open in
+https://ui.perfetto.dev or ``chrome://tracing``): slots as tracks,
+requests as flow-connected queued→prefill→decode slices.  With one
+path it dumps THIS process's live ring (useful after an in-process
+serve); with two it re-derives the view from a file previously written
+by ``benchmarks/serve_stream.py --trace`` / ``launch.serve --trace``
+(raw events ride inside the file), printing the per-request derived
+metrics either way.
 """
 from __future__ import annotations
 
@@ -17,6 +29,7 @@ import pathlib
 import sys
 
 from repro import obs
+from repro.obs import trace as trace_mod
 
 
 def _fmt(v) -> str:
@@ -55,12 +68,50 @@ def _diff(old: pathlib.Path, new: pathlib.Path) -> None:
         print(f"{key:<52s} {_fmt(va):>12s} {_fmt(vb):>12s} {change:>9s}")
 
 
+_TRACE_COLS = ("queue_wait_us", "ttft_wait_us", "ttft_prefill_us",
+               "decode_stall_us", "preemptions", "n_out")
+
+
+def _print_per_request(per: dict) -> None:
+    if not per:
+        print("(no request events in the trace)")
+        return
+    print(f"{'rid':>5s} " + " ".join(f"{c:>16s}" for c in _TRACE_COLS))
+    for rid in sorted(per):
+        r = per[rid]
+        print(f"{rid:>5d} " + " ".join(
+            f"{_fmt(r.get(c)):>16s}" for c in _TRACE_COLS))
+
+
+def _trace(files) -> int:
+    if len(files) == 1:                      # live ring of THIS process
+        events = obs.TRACE.snapshot()
+        out = pathlib.Path(files[0])
+        if not events:
+            print("live flight recorder is empty (tracing happens in the "
+                  "serving process; convert a --trace dump with: "
+                  "python -m repro.obs trace IN.json OUT.json)")
+    elif len(files) == 2:                    # re-export a --trace dump
+        events = trace_mod.load_events(files[0])
+        out = pathlib.Path(files[1])
+    else:
+        return -1
+    path = trace_mod.write_trace(out, events)
+    per = trace_mod.per_request(events)
+    _print_per_request(per)
+    print(f"wrote {path} ({len(events)} events; open in "
+          f"https://ui.perfetto.dev)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.obs",
                                  description=__doc__.splitlines()[0])
     ap.add_argument("cmd", nargs="?", default="list",
-                    choices=["list", "show", "diff", "report"])
-    ap.add_argument("files", nargs="*", help="BENCH_*.json path(s)")
+                    choices=["list", "ls", "show", "diff", "report",
+                             "trace"])
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json path(s); for trace: [IN] OUT")
     args = ap.parse_args(argv)
 
     if args.cmd == "report":
@@ -75,6 +126,11 @@ def main(argv=None) -> int:
         if len(args.files) != 2:
             ap.error("diff takes exactly two BENCH files: OLD NEW")
         _diff(pathlib.Path(args.files[0]), pathlib.Path(args.files[1]))
+        return 0
+    if args.cmd == "trace":
+        if _trace(args.files) != 0:
+            ap.error("trace takes OUT.json (live ring) or IN.json OUT.json "
+                     "(re-export a dump)")
         return 0
     found = sorted(obs.bench_root().glob("BENCH_*.json"))
     if not found:

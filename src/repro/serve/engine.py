@@ -97,7 +97,16 @@ class PagedEngine:
     Block exhaustion preempts the youngest sequence (blocks AND its
     slot-state row released, generated tokens kept, re-queued at the
     front; resume re-prefills prompt+generated, which rebuilds the
-    recurrent carry from zero inside the jit'd prefill step)."""
+    recurrent carry from zero inside the jit'd prefill step).
+
+    Every lifecycle transition is recorded in the :data:`repro.obs.TRACE`
+    flight recorder (REQ_ARRIVE here, ADMIT/RESUME/PREEMPT in the
+    scheduler, EVICT in the cache map) so a single request's path
+    through the queue/slots is reconstructible after the fact; decode
+    steps are sampled 1-in-``TICK_SAMPLE`` to keep a long decode from
+    flushing the ring."""
+
+    TICK_SAMPLE = 8
 
     def __init__(self, model: Model, params, be: Optional[Policy] = None,
                  *, slots: int = 4, max_len: int = 256, eos: int = 2,
@@ -123,6 +132,7 @@ class PagedEngine:
         self.state = SlotStateStore(slots)
         self.scheduler = sched.SlotScheduler(self.cache, slots, self.state)
         self.done: Dict[int, List[int]] = {}
+        self._decode_steps = 0
         dtype = model.cfg.compute_dtype
         self._ps = model.init_paged_state(num_blocks, block_size, slots,
                                           dtype)
@@ -159,6 +169,8 @@ class PagedEngine:
             raise ValueError(f"request {req.rid} exceeds max_len "
                              f"{self.max_len}")
         obs.counter("serve.requests").inc()
+        obs.TRACE.emit("REQ_ARRIVE", rid=req.rid,
+                       arg=(len(req.prompt), req.max_new))
         seq = sched.Seq(req=req)
         # worst-case footprint: the longest possible resume target
         # (prompt + max_new-1 generated) prefilled with a chunk-padded
@@ -264,6 +276,10 @@ class PagedEngine:
             self.params, self._cur, self._ps,
             jnp.asarray(bt), jnp.asarray(pos), jnp.asarray(act), self.key)
         self._pending.append((self._cur, [(q, q.slot) for q in dec]))
+        self._decode_steps += 1
+        if obs.TRACE.on and self._decode_steps % self.TICK_SAMPLE == 0:
+            obs.TRACE.emit("DECODE_TICK",
+                           arg=(self._decode_steps, len(dec)))
         for q in dec:
             q.pos += 1
             q.inflight += 1
@@ -278,6 +294,7 @@ class PagedEngine:
         toks[0, :len(segment)] = segment
         final = (p0 + len(segment)) == len(target)
         last_idx = np.int32(len(segment) - 1)
+        t_chunk = time.perf_counter()
         row, self._ps = self._prefill_fn(
             self.params, jnp.asarray(toks), self._ps,
             jnp.asarray(self.cache.row(seq.rid)[None]),
@@ -286,6 +303,10 @@ class PagedEngine:
             last_idx)
         seq.pos = p0 + len(segment)
         obs.counter("serve.prefill_chunks").inc()
+        obs.TRACE.emit(
+            "PREFILL_CHUNK", rid=seq.rid, slot=seq.slot,
+            arg=(p0, len(segment)),
+            dur_us=(time.perf_counter() - t_chunk) * 1e6)
         if not final:
             return
         # host-side sample for the prefill boundary token only — every
@@ -297,6 +318,7 @@ class PagedEngine:
         if len(seq.out) == 1:
             obs.histogram("serve.ttft_us").record(
                 (time.perf_counter() - seq.req.t_submit) * 1e6)
+            obs.TRACE.emit("FIRST_TOKEN", rid=seq.rid, slot=seq.slot)
         # like the wave reference, the request's FIRST token is exempt
         # from EOS (a request always yields at least one token); a
         # post-preemption boundary token is an ordinary decode token
@@ -329,6 +351,8 @@ class PagedEngine:
         self.done[seq.rid] = seq.out
         obs.histogram("serve.e2e_us").record(
             (time.perf_counter() - seq.req.t_submit) * 1e6)
+        obs.TRACE.emit("FINISH", rid=seq.rid, slot=seq.slot,
+                       arg=len(seq.out))
         self.scheduler.finish(seq)
 
 

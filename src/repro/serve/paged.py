@@ -22,6 +22,8 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["OutOfBlocks", "BlockAllocator", "BlockTable", "CacheMap",
            "SlotStateStore"]
 
@@ -216,6 +218,7 @@ class CacheMap:
         if t is None:
             return 0
         self.allocator.free(t.ids)
+        obs.TRACE.emit("EVICT", rid=rid, arg=len(t.ids))
         return len(t.ids)
 
     def row(self, rid: int) -> np.ndarray:

@@ -118,6 +118,8 @@ class SlotScheduler:
             self.live[seq.rid] = seq
             if self.state is not None:
                 self.state.bind(s, seq.rid)
+            obs.TRACE.emit("RESUME" if seq.preemptions else "ADMIT",
+                           rid=seq.rid, slot=s)
             admitted.append(seq)
         return admitted
 
@@ -163,6 +165,7 @@ class SlotScheduler:
         """Release everything and put the sequence back at the FRONT of
         the queue; generated tokens survive in ``seq.out``."""
         assert seq.inflight == 0, "drain before preempting"
+        obs.TRACE.emit("PREEMPT", rid=seq.rid, slot=seq.slot)
         self.cache.release(seq.rid)
         if self.state is not None:
             self.state.release(seq.rid)

@@ -214,13 +214,19 @@ _active = _UNSET                  # _UNSET: not yet loaded; None: known-absent
 _active_lock = threading.Lock()
 
 
+def _profile_tag(p: Optional[DeviceProfile]) -> Optional[str]:
+    return f"{p.device_kind}/{p.mode}:{len(p)}" if p is not None else None
+
+
 def set_active_profile(p: Optional[DeviceProfile]) -> None:
     global _active
     with _active_lock:
         _active = p
     # decisions memoized by the obs route log may have consulted the old
-    # profile — every active-profile transition invalidates them
+    # profile — every active-profile transition invalidates them (and is
+    # itself a traced event: a swap explains a burst of ROUTE_MISSes)
     obs.ROUTES.invalidate()
+    obs.TRACE.emit("PROFILE_SWAP", arg=_profile_tag(p))
 
 
 def clear_active_profile() -> None:
@@ -230,6 +236,7 @@ def clear_active_profile() -> None:
     with _active_lock:
         _active = _UNSET
     obs.ROUTES.invalidate()
+    obs.TRACE.emit("PROFILE_SWAP", arg=None)
 
 
 def active_profile() -> Optional[DeviceProfile]:
@@ -244,4 +251,5 @@ def active_profile() -> Optional[DeviceProfile]:
             except (OSError, ValueError, KeyError, json.JSONDecodeError):
                 _active = None
             obs.ROUTES.invalidate()
+            obs.TRACE.emit("PROFILE_SWAP", arg=_profile_tag(_active))
         return _active

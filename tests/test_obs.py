@@ -91,6 +91,30 @@ def test_histogram_empty():
     assert h.to_json()["min"] == 0.0
 
 
+def test_histogram_percentile_edges_are_exact():
+    """q<=0 / q>=100 return the observed extremes — not the min/max
+    *bucket* midpoints a ceil'd rank would land on."""
+    h = obs.histogram("t.edge")
+    for v in (3.0, 7.0, 250.0):
+        h.record(v)
+    assert h.percentile(0) == 3.0
+    assert h.percentile(-5) == 3.0
+    assert h.percentile(100) == 250.0
+    assert h.percentile(150) == 250.0
+    # a negative sample is the true minimum, not clamped to the 0 bucket
+    h.record(-3.0)
+    assert h.percentile(0) == -3.0
+
+
+def test_histogram_percentile_all_zeros():
+    h = obs.histogram("t.allz")
+    for _ in range(5):
+        h.record(0.0)
+    assert h.zeros == 5
+    for q in (0, 50, 100):
+        assert h.percentile(q) == 0.0
+
+
 # -- spans ------------------------------------------------------------------
 
 def test_span_nesting_builds_dotted_paths():
@@ -189,6 +213,92 @@ def test_route_log_compaction_preserves_counts():
         rl.CAP = old_cap
 
 
+def test_route_log_threaded_note_and_readers():
+    """Writers inserting distinct shapes (every route is a memo miss ->
+    ``note`` under the lock, repeatedly crossing CAP and compacting)
+    race concurrent ``histogram``/``shape_counts`` readers: no
+     'dict changed size during iteration', and the exact total survives
+    because every write path holds the lock."""
+    import threading
+    rl = obs.ROUTES
+    old_cap = rl.CAP
+    rl.CAP = 64
+    n_threads, n_shapes = 4, 300
+    errors, stop = [], threading.Event()
+
+    def write(tid):
+        try:
+            r = api.Router(Policy(backend="auto"))
+            for i in range(n_shapes):
+                m = 8 + tid * n_shapes + i          # distinct across threads
+                r.route("gemm", (m, m, m), "S", "NN")
+        except Exception as e:                       # pragma: no cover
+            errors.append(e)
+
+    def read():
+        try:
+            while not stop.is_set():
+                rl.histogram()
+                rl.shape_counts()
+        except Exception as e:                       # pragma: no cover
+            errors.append(e)
+
+    try:
+        ts = [threading.Thread(target=write, args=(t,))
+              for t in range(n_threads)]
+        ts.append(threading.Thread(target=read))
+        for t in ts:
+            t.start()
+        for t in ts[:-1]:
+            t.join()
+        stop.set()
+        ts[-1].join()
+    finally:
+        rl.CAP = old_cap
+    assert not errors
+    assert rl.total == n_threads * n_shapes
+    assert len(rl.hits) <= 64
+
+
+# -- windowed shape observation ---------------------------------------------
+
+def test_routes_windowed_rotation_and_decay():
+    b = classes.bucket_index
+    ka = ("gemm", "S", f"{b(45)}-{b(77)}-{b(33)}")
+    kb = ("gemm", "S", f"{b(300)}-{b(300)}-{b(300)}")
+    r = api.Router(Policy(backend="auto"))
+    r.route("gemm", (45, 77, 33), "S", "NN")
+    w = obs.ROUTES.windowed(4, bucket_s=1.0, now=100.0)
+    assert w == [{ka: 1}]                # window opens; nothing closed yet
+    r.route("gemm", (45, 77, 33), "S", "NN")
+    r.route("gemm", (300, 300, 300), "S", "NN")
+    w = obs.ROUTES.windowed(4, bucket_s=1.0, now=101.5)
+    assert w == [{}, {ka: 2, kb: 1}]     # bucket closed; fresh one empty
+    r.route("gemm", (300, 300, 300), "S", "NN")
+    w = obs.ROUTES.windowed(4, bucket_s=1.0, now=102.0)
+    assert w == [{kb: 1}, {ka: 2, kb: 1}]   # 0.5s < 1s: still filling
+    # decay fold: open bucket weighted 1, previous bucket decay**1
+    folded = obs.ROUTES.windowed(4, bucket_s=1.0, decay=0.5, now=102.0)
+    assert folded == {kb: 1 + 0.5 * 1, ka: 0.5 * 2}
+    # a traffic shift dominates the folded view within one bucket
+    assert folded[kb] > folded[ka]
+
+
+def test_routes_windowed_caps_and_validates():
+    r = api.Router(Policy(backend="auto"))
+    for i in range(4):
+        r.route("gemm", (45, 77, 33), "S", "NN")
+        obs.ROUTES.windowed(8, bucket_s=1.0, now=100.0 + i)
+    w = obs.ROUTES.windowed(2, bucket_s=1.0, now=110.0)
+    assert len(w) == 2                   # n_buckets bounds the view
+    with pytest.raises(ValueError):
+        obs.ROUTES.windowed(0)
+    with pytest.raises(ValueError):
+        obs.ROUTES.windowed(2, decay=1.5)
+    obs.ROUTES.reset()
+    assert obs.ROUTES.windowed(4, bucket_s=1.0, now=200.0) == [{}]
+
+
 # -- BENCH export -----------------------------------------------------------
 
 def test_export_load_diff_roundtrip(tmp_path):
@@ -248,3 +358,56 @@ def test_disabled_routing_still_correct():
         "gemm", (45, 77, 33), "S", "NN")
     assert d.source in ("forced", "analytical")
     assert isinstance(d.use_pallas, bool)
+
+
+# -- the CLI ----------------------------------------------------------------
+
+def _cli(capsys, *argv):
+    from repro.obs.__main__ import main
+    rc = main(list(argv))
+    return rc, capsys.readouterr().out
+
+
+def test_cli_report_prints_live_registry(capsys):
+    obs.counter("t.cli").inc(3)
+    rc, out = _cli(capsys, "report")
+    assert rc == 0 and "repro.obs report" in out and "t.cli" in out
+
+
+def test_cli_ls_and_show(tmp_path, monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    obs.counter("t.reqs").inc(4)
+    obs.export_bench("one", {"note": "x"}, root=tmp_path)
+    for cmd in ("ls", "list"):
+        rc, out = _cli(capsys, cmd)
+        assert rc == 0 and "BENCH_one.json" in out and "t.reqs" in out
+    rc, out = _cli(capsys, "show", str(tmp_path / "BENCH_one.json"))
+    assert rc == 0 and "note=x" in out
+
+
+def test_cli_ls_empty_dir_hints(tmp_path, monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    rc, out = _cli(capsys, "ls")
+    assert rc == 0 and "no BENCH_*.json" in out
+
+
+def test_cli_diff_percent_change_rows(tmp_path, capsys):
+    obs.counter("t.reqs").inc(10)
+    p1 = obs.export_bench("old", root=tmp_path)
+    obs.counter("t.reqs").inc(5)
+    obs.counter("t.fresh").inc(1)        # one-sided key prints "-"
+    p2 = obs.export_bench("new", root=tmp_path)
+    rc, out = _cli(capsys, "diff", str(p1), str(p2))
+    assert rc == 0
+    row = next(ln for ln in out.splitlines() if ln.startswith("t.reqs"))
+    assert "+50.0%" in row and "10" in row and "15" in row
+    fresh = next(ln for ln in out.splitlines() if ln.startswith("t.fresh"))
+    assert fresh.rstrip().endswith("-")
+
+
+def test_cli_arity_errors_exit_nonzero():
+    from repro.obs.__main__ import main
+    for argv in (["show"], ["diff", "one.json"], ["show", "a", "b"]):
+        with pytest.raises(SystemExit) as ei:
+            main(argv)
+        assert ei.value.code != 0
