@@ -306,8 +306,11 @@ class Router:
         if pol.backend == "xla":
             return Decision(False, "forced", op, blocks=analytical)
         if pol.backend == "tuned":
-            # grouped kernels consume operands as stored — trans is NN
-            entry = self._profile_entry(C, N, K, letter, "NN")
+            # grouped kernels consume operands as stored — trans is NN.
+            # Prefer an entry measured ON the grouped kernel (the online
+            # tuner's ``grouped:``-namespace sweep); fall back to the
+            # 2-D timing of the per-group shape for older profiles.
+            entry = self._grouped_profile_entry(C, N, K, letter)
             if entry is not None:
                 blocks = analytical
                 if entry.sig is not None:
@@ -326,6 +329,19 @@ class Router:
         if prof is None:
             return None
         entry = prof.lookup_dims(M, N, K, letter, trans)
+        if entry is None or not entry.measured:
+            return None
+        return entry
+
+    @staticmethod
+    def _grouped_profile_entry(C, N, K, letter):
+        from repro.tune import profile as profile_mod
+        prof = profile_mod.active_profile()
+        if prof is None:
+            return None
+        entry = prof.lookup_grouped_dims(C, N, K, letter)
+        if entry is None or not entry.measured:
+            entry = prof.lookup_dims(C, N, K, letter, "NN")
         if entry is None or not entry.measured:
             return None
         return entry

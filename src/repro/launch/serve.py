@@ -44,6 +44,14 @@ def main() -> None:
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write the flight-recorder timeline as a "
                          "Chrome-trace/Perfetto JSON after the run")
+    ap.add_argument("--online-tune", action="store_true",
+                    help="run the background traffic-aware re-tuner for "
+                         "the engine's lifetime: hot size classes from "
+                         "ROUTES.windowed() are re-timed on a budget and "
+                         "merged into the live profile (kill switch: "
+                         "REPRO_ONLINE_TUNE=0; pair with a routing "
+                         "--backend — forced xla never calls route(), "
+                         "so the tuner sees no traffic and idles)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -62,10 +70,18 @@ def main() -> None:
     be = api.install(api.named_policy(args.backend, interpret=True))
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.RandomState(args.seed)
+    tuner = None
+    if args.online_tune:
+        from repro.tune.online import OnlineTuner
+        # small-budget knobs: a smoke serve is short, so cycle fast and
+        # time little — the point is the loop, not the profile quality
+        tuner = OnlineTuner(interval_s=0.5, budget=4, top=1, reps=1)
     batcher = PagedEngine(model, params, be, slots=args.slots,
                           max_len=256, temperature=args.temperature,
-                          seed=args.seed, block_size=args.block_size)
-    log.info("engine=paged arch=%s slots=%d", args.arch, args.slots)
+                          seed=args.seed, block_size=args.block_size,
+                          tuner=tuner)
+    log.info("engine=paged arch=%s slots=%d online_tune=%s", args.arch,
+             args.slots, bool(tuner))
     t0 = time.time()
     for rid in range(args.requests):
         plen = int(rng.randint(4, 24))
@@ -79,6 +95,9 @@ def main() -> None:
                  done[rid][:8])
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
+    if tuner is not None:
+        print(f"online tuner: {tuner.cycles} cycles, {tuner.swaps} "
+              f"profile swaps")
     if args.trace:
         from repro.obs import trace as trace_mod
         path = trace_mod.write_trace(args.trace, slots=args.slots)

@@ -62,6 +62,8 @@ EVENT_TYPES = frozenset((
     "EVICT",          # paged.CacheMap.release: rid, blocks freed
     "ROUTE_MISS",     # api.Router.route memo-miss: (op, letter, trans, dims)
     "PROFILE_SWAP",   # tune.profile active-profile transition: tag
+    "TUNE_CYCLE",     # tune.online cycle end: (cycle, retuned, timings,
+                      #   swapped), dur_us = cycle wall time
 ))
 
 #: One record: (t, type, rid, slot, arg, dur_us).  ``t`` is a
@@ -307,7 +309,11 @@ def perfetto(events: Iterable[Event], *,
 
     Track layout: pid 1 ("repro.serve") has tid 0 = the admission queue
     and tid ``1+s`` = slot ``s``; pid 2 ("repro.router") carries
-    ROUTE_MISS / PROFILE_SWAP instants.  Each request becomes a chain of
+    ROUTE_MISS / PROFILE_SWAP instants on tid 0 and the online tuner's
+    TUNE_CYCLE slices on its own tid 1 track (each cycle renders as a
+    complete slice spanning its measured duration, so a miss burst on
+    the route track lines up under the swap that caused it and the
+    cycle that produced the swap).  Each request becomes a chain of
     complete ("X") slices — ``queued`` on the queue track, ``prefill`` /
     ``decode`` on the slot that ran it — linked by flow events
     (``s``/``t``/``f`` with ``id = rid``), so Perfetto draws the arrow
@@ -333,7 +339,8 @@ def perfetto(events: Iterable[Event], *,
         te.extend(_meta(_PID_SERVE, 1 + s, "thread_name", f"slot {s}",
                         sort=1 + s))
     te.extend(_meta(_PID_ROUTER, None, "process_name", "repro.router"))
-    te.extend(_meta(_PID_ROUTER, 0, "thread_name", "route/profile"))
+    te.extend(_meta(_PID_ROUTER, 0, "thread_name", "route/profile", sort=0))
+    te.extend(_meta(_PID_ROUTER, 1, "thread_name", "online tuner", sort=1))
 
     # per-request open slice: (t_start, tid, phase_name)
     open_slice: Dict[int, Tuple[float, int, str]] = {}
@@ -404,6 +411,18 @@ def perfetto(events: Iterable[Event], *,
             te.append({"ph": "i", "pid": _PID_ROUTER, "tid": 0,
                        "name": "profile_swap", "cat": "router",
                        "ts": us(t), "s": "p", "args": {"profile": arg}})
+        elif etype == "TUNE_CYCLE":
+            # emitted at cycle END with the cycle wall time; render the
+            # slice backwards from t so it covers the work it timed
+            if dur:
+                te.append({"ph": "X", "pid": _PID_ROUTER, "tid": 1,
+                           "name": "tune_cycle", "cat": "tuner",
+                           "ts": max(us(t) - round(dur, 3), 0.0),
+                           "dur": round(dur, 3), "args": {"cycle": arg}})
+            else:
+                te.append({"ph": "i", "pid": _PID_ROUTER, "tid": 1,
+                           "name": "tune_cycle", "cat": "tuner",
+                           "ts": us(t), "s": "t", "args": {"cycle": arg}})
 
     # close anything still open at the end of the capture window
     for rid in list(open_slice):

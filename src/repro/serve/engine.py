@@ -112,13 +112,17 @@ class PagedEngine:
                  *, slots: int = 4, max_len: int = 256, eos: int = 2,
                  temperature: float = 0.0, seed: int = 0,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 chunk: int = 32, drain_every: int = 4):
+                 chunk: int = 32, drain_every: int = 4, tuner=None):
         if model.paged_decode is None:
             raise ValueError(
                 f"{model.cfg.name}: family {model.cfg.family!r} has no "
                 "paged serving path")
         be = be if be is not None else api.current_policy()
         self.model, self.params, self.be = model, params, be
+        # optional repro.tune.online.OnlineTuner: run() starts it and
+        # stops it on drain, so `--online-tune` serving re-tunes hot
+        # classes in the background for exactly the engine's lifetime
+        self.tuner = tuner
         self.slots, self.max_len, self.eos = slots, max_len, eos
         self.temperature, self.chunk = temperature, chunk
         self.drain_every = max(1, drain_every)
@@ -215,21 +219,30 @@ class PagedEngine:
         return worked
 
     def run(self) -> Dict[int, List[int]]:
-        stall = 0
-        while True:
-            if self.step():
-                stall = 0
-                continue
-            if self._pending:
-                self._drain()
-                continue
-            if not self.scheduler.has_work():
-                break
-            stall += 1
-            if stall > 10000:   # fail loudly, never hang
-                raise RuntimeError("paged engine stalled: "
-                                   f"{self.scheduler.active()} live, "
-                                   f"{len(self.scheduler.queue)} queued")
+        if self.tuner is not None:
+            self.tuner.start()      # no-op under REPRO_ONLINE_TUNE=0
+        try:
+            stall = 0
+            while True:
+                if self.step():
+                    stall = 0
+                    continue
+                if self._pending:
+                    self._drain()
+                    continue
+                if not self.scheduler.has_work():
+                    break
+                stall += 1
+                if stall > 10000:   # fail loudly, never hang
+                    raise RuntimeError("paged engine stalled: "
+                                       f"{self.scheduler.active()} live, "
+                                       f"{len(self.scheduler.queue)} queued")
+        finally:
+            # clean shutdown on drain (or on a raise): the tuner thread
+            # joins before run() returns, so no background timing work
+            # outlives the engine loop
+            if self.tuner is not None:
+                self.tuner.stop()
         return self.done
 
     # -- internals ---------------------------------------------------------

@@ -11,19 +11,25 @@ persists the winners as a versioned per-device :class:`DeviceProfile`
 grouped MoE/serving paths alike — falling back to the analytical model
 for unmeasured classes.
 
-``python -m repro.tune`` runs the sweep and writes the profile.
+``python -m repro.tune`` runs the sweep and writes the profile; the
+*online* stage (online.py) re-runs a budgeted slice of it continuously,
+weighted by the live ``ROUTES.windowed()`` traffic, and swaps the
+merged profile in without restarting the engine.
 """
 from repro.tune.classes import SizeClass, size_class, representative
+from repro.tune.online import CycleReport, OnlineTuner, weighted_targets
 from repro.tune.profile import (DeviceProfile, ProfileEntry, active_profile,
                                 clear_active_profile, default_profile_path,
                                 set_active_profile)
-from repro.tune.search import sweep, tune_class
+from repro.tune.search import (TuneTarget, budgeted_sweep, sweep, tune_class,
+                               tune_grouped_class)
 from repro.tune.timer import Measurement, measure
 
 __all__ = [
     "SizeClass", "size_class", "representative",
     "DeviceProfile", "ProfileEntry", "active_profile",
     "clear_active_profile", "default_profile_path", "set_active_profile",
-    "sweep", "tune_class",
+    "sweep", "tune_class", "tune_grouped_class", "budgeted_sweep",
+    "TuneTarget", "OnlineTuner", "CycleReport", "weighted_targets",
     "Measurement", "measure",
 ]

@@ -39,6 +39,14 @@ PROFILE_VERSION = 1
 CACHE_ENV = "REPRO_TUNE_CACHE"
 _DEFAULT_CACHE = "~/.cache/repro/tune"
 
+#: Entry-key namespace for classes measured on the GROUPED kernels
+#: (``batched_gemm``/``ragged_gemm`` time differently from a lone 2-D
+#: gemm of the per-group shape: G problems stream through one launch).
+#: Entry keys are opaque strings, so the prefix composes with merge,
+#: save/load and better_than without a schema bump — old files simply
+#: have no ``grouped:`` keys and the router falls back to the 2-D entry.
+GROUPED_PREFIX = "grouped:"
+
 
 def _sig_to_json(sig: KernelSig) -> dict:
     return {"letter": sig.letter, "trans": sig.trans,
@@ -56,6 +64,11 @@ class ProfileEntry:
     sig: Optional[KernelSig]          # best pallas kernel (None: none ran)
     pallas: Optional[Measurement]
     xla: Optional[Measurement]
+    # merge provenance: which stage produced the timing ("sweep" = the
+    # offline CLI, "online" = the background re-tuner).  Informational
+    # only — merge still keeps whichever entry measured faster, so a
+    # newer online entry replaces an offline one iff it is better.
+    origin: str = "sweep"
 
     @property
     def measured(self) -> bool:
@@ -77,6 +90,7 @@ class ProfileEntry:
             "sig": _sig_to_json(self.sig) if self.sig else None,
             "pallas": self.pallas.to_json() if self.pallas else None,
             "xla": self.xla.to_json() if self.xla else None,
+            "origin": self.origin,
         }
 
     @classmethod
@@ -85,6 +99,7 @@ class ProfileEntry:
             _sig_from_json(d["sig"]) if d.get("sig") else None,
             Measurement.from_json(d["pallas"]) if d.get("pallas") else None,
             Measurement.from_json(d["xla"]) if d.get("xla") else None,
+            d.get("origin", "sweep"),      # pre-online files: offline sweep
         )
 
     def better_than(self, other: "ProfileEntry") -> bool:
@@ -116,6 +131,20 @@ class DeviceProfile:
 
     def record(self, sc: SizeClass, entry: ProfileEntry) -> None:
         self.entries[sc.key] = entry
+
+    # -- grouped-kernel namespace (see GROUPED_PREFIX) ---------------------
+
+    def lookup_grouped(self, sc: SizeClass) -> Optional[ProfileEntry]:
+        return self.entries.get(GROUPED_PREFIX + sc.key)
+
+    def lookup_grouped_dims(self, C: int, N: int, K: int,
+                            letter: str) -> Optional[ProfileEntry]:
+        """Grouped per-group problem (C, K, N) keyed as the (M=C, N, K)
+        class; grouped kernels consume operands as stored (trans NN)."""
+        return self.lookup_grouped(size_class(C, N, K, letter, "NN"))
+
+    def record_grouped(self, sc: SizeClass, entry: ProfileEntry) -> None:
+        self.entries[GROUPED_PREFIX + sc.key] = entry
 
     def __len__(self) -> int:
         return len(self.entries)

@@ -11,7 +11,8 @@ final word stays empirical.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -110,6 +111,110 @@ def tune_class(sc: SizeClass, *, top: int = 4, warmup: int = 1,
         if m is not None and (best is None or m.median_us < best.median_us):
             best_sig, best = sig, m
     return ProfileEntry(best_sig, best, xla)
+
+
+def tune_grouped_class(sc: SizeClass, *, G: int = 4, top: int = 4,
+                       warmup: int = 1, reps: int = 5,
+                       interpret: bool = True) -> ProfileEntry:
+    """Measure one grouped size class ON the grouped kernel.
+
+    The per-group problem (C, K, N) keys the same class table as 2-D
+    gemm (M = C), but G problems stream through one ``batched_gemm``
+    launch, so its crossover and best blocks differ from a lone gemm of
+    the same shape — this times the real thing instead of reusing the
+    2-D entry (the PR-2 leftover).  The XLA side is the batched einsum
+    the executor falls back to.
+    """
+    from repro.kernels import grouped_gemm as _gg
+    C, N, K = classes_mod.representative(sc)
+    rng = np.random.RandomState(0x1AA7)
+    dt = {**kernelgen.BLAS_DTYPES, **kernelgen.FRAMEWORK_DTYPES}[sc.letter]
+
+    def mk(shape):
+        x = rng.randn(*shape)
+        if kernelgen.IS_COMPLEX.get(sc.letter, False):
+            x = x + 1j * rng.randn(*shape)
+        return jnp.asarray(x, dt)
+
+    x, w = mk((G, C, K)), mk((G, K, N))
+
+    @jax.jit
+    def _einsum(x, w):
+        return jnp.einsum("gck,gkn->gcn", x, w)
+
+    xla = try_measure(lambda: _einsum(x, w), warmup=warmup, reps=reps)
+    best_sig: Optional[KernelSig] = None
+    best: Optional[Measurement] = None
+    for sig in candidates(sc.letter, "NN", C, N, K, top=top):
+
+        def _fn(sig=sig):
+            @jax.jit
+            def f(x, w):
+                return _gg.batched_gemm(x, w, interpret=interpret,
+                                        blocks=(sig.bm, sig.bn, sig.bk))
+            return lambda: f(x, w)
+
+        m = try_measure(_fn(), warmup=warmup, reps=reps)
+        if m is not None and (best is None or m.median_us < best.median_us):
+            best_sig, best = sig, m
+    return ProfileEntry(best_sig, best, xla)
+
+
+# --------------------------------------------------------------------------
+# Budgeted sweep — the online tuner's entry point.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TuneTarget:
+    """One class the online tuner wants re-timed, with its traffic
+    weight.  ``kind`` picks the measuring harness: ``"gemm"`` times the
+    2-D plan path, ``"grouped"`` times ``batched_gemm`` and records
+    under the profile's ``grouped:`` key namespace."""
+    kind: str                       # "gemm" | "grouped"
+    sc: SizeClass
+    weight: float = 0.0
+
+
+def budgeted_sweep(targets: Sequence[TuneTarget], *, budget: int = 8,
+                   top: int = 1, warmup: int = 0, reps: int = 1,
+                   interpret: bool = True, grouped_G: int = 4,
+                   device_kind: Optional[str] = None,
+                   ) -> Tuple[DeviceProfile, List[TuneTarget], int]:
+    """Re-tune ``targets`` in order until the timing budget runs out.
+
+    ``budget`` caps the number of stopwatch timings per call (each class
+    costs at most ``1 + top``: the baseline plus the prior-pruned pallas
+    candidates) so one online cycle's worth of measuring is bounded no
+    matter how many classes went hot.  Stops BEFORE starting a class
+    that could exceed the budget — a class is either fully timed or not
+    touched.  Returns ``(delta_profile, tuned_targets, timings_spent)``;
+    the delta holds only the classes actually tuned, ready to merge.
+    """
+    prof = DeviceProfile(device_kind or current_device_kind(),
+                         mode="interpret" if interpret else "compiled")
+    per_class = 1 + max(1, top)
+    spent = 0
+    tuned: List[TuneTarget] = []
+    with obs.span("tune.online_sweep"):
+        for t in targets:
+            if spent + per_class > budget:
+                break
+            with obs.span("tune.class"):
+                if t.kind == "grouped":
+                    entry = tune_grouped_class(
+                        t.sc, G=grouped_G, top=top, warmup=warmup,
+                        reps=reps, interpret=interpret)
+                    prof.record_grouped(
+                        t.sc, dataclasses.replace(entry, origin="online"))
+                else:
+                    entry = tune_class(t.sc, top=top, warmup=warmup,
+                                       reps=reps, interpret=interpret)
+                    prof.record(
+                        t.sc, dataclasses.replace(entry, origin="online"))
+            obs.counter("tune.classes_swept").inc()
+            spent += per_class
+            tuned.append(t)
+    return prof, tuned, spent
 
 
 def sweep(letters: Sequence[str] = ("S",),

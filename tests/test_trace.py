@@ -339,3 +339,86 @@ def test_paged_engine_emits_full_lifecycle():
     for rid in preempted:
         assert any(x["name"] == f"req {rid} queued (preempted)"
                    for x in slices)
+
+
+# --------------------------------------------------------------------------
+# Online-tuner events: TUNE_CYCLE track + swap/miss attribution.
+# --------------------------------------------------------------------------
+
+def test_perfetto_tune_cycle_renders_on_own_tuner_track():
+    evs = [(0.0, "ROUTE_MISS", -1, -1,
+            ("gemm", "S", "NN", [45, 45, 45], "analytical"), None),
+           (0.010, "TUNE_CYCLE", -1, -1, (1, 2, 4, True), 2500.0),
+           (0.020, "TUNE_CYCLE", -1, -1, (2, 0, 0, False), None)]
+    doc = trace.perfetto(evs)
+    te = doc["traceEvents"]
+    tracks = {(e["pid"], e["tid"]): e["args"]["name"] for e in te
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    router_pid = next(e["pid"] for e in te if e["ph"] == "M"
+                      and e["name"] == "process_name"
+                      and e["args"]["name"] == "repro.router")
+    assert tracks[(router_pid, 0)] == "route/profile"
+    assert tracks[(router_pid, 1)] == "online tuner"
+
+    # a cycle with a measured duration is a complete slice spanning
+    # backwards from its end-of-cycle emit time, on the tuner's track
+    cyc = [e for e in te if e["ph"] == "X" and e["name"] == "tune_cycle"]
+    assert len(cyc) == 1
+    assert cyc[0]["pid"] == router_pid and cyc[0]["tid"] == 1
+    assert cyc[0]["dur"] == pytest.approx(2500.0)
+    assert cyc[0]["ts"] == pytest.approx(10000.0 - 2500.0)
+    assert cyc[0]["args"]["cycle"] == (1, 2, 4, True)
+    # without a duration it degrades to an instant, same track
+    inst = [e for e in te if e["ph"] == "i" and e["name"] == "tune_cycle"]
+    assert len(inst) == 1 and inst[0]["tid"] == 1
+    # the route instants stay off the tuner track
+    miss = [e for e in te if e["ph"] == "i" and e["name"] == "route_miss"]
+    assert miss and all(e["tid"] == 0 for e in miss)
+
+
+def test_swap_to_miss_burst_attribution_survives_roundtrip(tmp_path,
+                                                           monkeypatch):
+    """The debugging story the trace exists for: a PROFILE_SWAP followed
+    by the ROUTE_MISS burst it caused, with ordering and args intact
+    after the write_trace/load_events roundtrip — generated by the real
+    Router/profile machinery, not synthetic tuples."""
+    from repro import api
+    from repro.tune import profile as profile_mod
+    monkeypatch.setenv(profile_mod.CACHE_ENV, str(tmp_path / "cache"))
+    profile_mod.clear_active_profile()
+    obs.TRACE.reset()
+    r = api.Router(api.Policy(backend="auto"))
+    dims = [(16, 16, 16), (32, 32, 32), (48, 48, 48)]
+    for d in dims:
+        r.route("gemm", d, "S", "NN")    # cold misses
+        r.route("gemm", d, "S", "NN")    # memo hits: silent
+    profile_mod.set_active_profile(None)  # the swap under test
+    for d in dims:
+        r.route("gemm", d, "S", "NN")    # recompute burst
+    try:
+        evs = obs.TRACE.snapshot()
+        seq = [(e[1], e[4]) for e in evs
+               if e[1] in ("ROUTE_MISS", "PROFILE_SWAP")]
+        kinds = [k for k, _ in seq]
+        # 3 cold misses, one swap, then exactly 3 re-route misses —
+        # the memoized hot path emitted nothing
+        assert kinds == ["ROUTE_MISS"] * 3 + ["PROFILE_SWAP"] \
+            + ["ROUTE_MISS"] * 3
+        swap_at = kinds.index("PROFILE_SWAP")
+        burst = seq[swap_at + 1:]
+        assert [tuple(a[3]) for _, a in burst] == dims
+
+        back = trace.load_events(trace.write_trace(tmp_path / "t.json",
+                                                   evs))
+        seq2 = [(e[1], e[4]) for e in back
+                if e[1] in ("ROUTE_MISS", "PROFILE_SWAP")]
+        # args come back as lists after JSON; compare re-normalized
+        norm = lambda s: [(k, json.loads(json.dumps(list(a)))
+                           if isinstance(a, (tuple, list)) else a)
+                          for k, a in s]  # noqa: E731
+        assert norm(seq2) == norm(seq)
+        # timestamps stay monotone through the rebase
+        ts = [e[0] for e in back]
+        assert ts == sorted(ts)
+    finally:
+        profile_mod.clear_active_profile()

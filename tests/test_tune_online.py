@@ -1,0 +1,398 @@
+"""repro.tune.online: traffic weighting from the windowed feed, budget
+enforcement, merge provenance, live swap plumbing, the background
+thread lifecycle, and Router thread-safety under profile-swap hammering."""
+import threading
+import time
+
+import pytest
+
+from repro import api, obs
+from repro.api import Policy
+from repro.core.kernelgen import KernelSig
+from repro.tune import classes, online, profile as profile_mod, search
+from repro.tune.classes import SizeClass
+from repro.tune.online import OnlineTuner, weighted_targets
+from repro.tune.profile import DeviceProfile, ProfileEntry
+from repro.tune.search import TuneTarget
+from repro.tune.timer import Measurement
+
+
+@pytest.fixture(autouse=True)
+def _isolated_state(tmp_path, monkeypatch):
+    """Empty tune cache, no active profile, clean obs — before and after."""
+    monkeypatch.setenv(profile_mod.CACHE_ENV, str(tmp_path / "cache"))
+    obs.set_enabled(True)
+    obs.reset()
+    profile_mod.clear_active_profile()
+    obs.TRACE.reset()
+    yield
+    profile_mod.clear_active_profile()
+    obs.set_enabled(True)
+    obs.reset()
+
+
+def _m(us: float) -> Measurement:
+    return Measurement(us, us, us, 1)
+
+
+def _entry(pallas_us=None, xla_us=None, sig=None, origin="sweep"):
+    return ProfileEntry(sig, _m(pallas_us) if pallas_us else None,
+                        _m(xla_us) if xla_us else None, origin)
+
+
+def _kind() -> str:
+    return profile_mod.current_device_kind()
+
+
+# -- traffic weighting ------------------------------------------------------
+
+def test_weighted_targets_orders_by_traffic_and_merges_ops():
+    folded = {("gemm", "S", "3-3-3"): 10.0,
+              ("matmul", "S", "3-3-3"): 5.0,      # same class, same kind
+              ("gemm", "S", "5-5-5"): 8.0}
+    ts = weighted_targets(folded)
+    assert [t.sc.key for t in ts] == ["S/NN/3-3-3", "S/NN/5-5-5"]
+    assert ts[0].weight == 15.0 and ts[0].kind == "gemm"
+
+
+def test_weighted_targets_ignores_cold_classes():
+    folded = {("gemm", "S", "3-3-3"): 5.0, ("gemm", "S", "4-4-4"): 0.25}
+    ts = weighted_targets(folded, min_weight=1.0)
+    assert [t.sc.key for t in ts] == ["S/NN/3-3-3"]
+
+
+def test_weighted_targets_grouped_ops_map_to_grouped_kind():
+    folded = {("batched_gemm", "S", "2-4-4"): 3.0,
+              ("ragged_gemm", "S", "2-4-4"): 1.0,
+              ("gemm", "S", "2-4-4"): 2.0}
+    ts = weighted_targets(folded)
+    kinds = {t.kind: t.weight for t in ts}
+    # grouped ops pool together but never merge with the 2-D kind: the
+    # same class measures differently on the grouped kernel
+    assert kinds == {"grouped": 4.0, "gemm": 2.0}
+
+
+def test_weighted_targets_done_skip_until_traffic_shifts():
+    folded = {("gemm", "S", "3-3-3"): 10.0}
+    done = {("gemm", "S/NN/3-3-3"): 9.0}
+    # 10 <= 1.5 * 9: steady traffic, already tuned -> skipped
+    assert weighted_targets(folded, done=done, retune_ratio=1.5) == []
+    # a real shift (weight > ratio * last-tuned weight) re-tunes
+    folded[("gemm", "S", "3-3-3")] = 20.0
+    ts = weighted_targets(folded, done=done, retune_ratio=1.5)
+    assert len(ts) == 1 and ts[0].weight == 20.0
+
+
+def test_weighted_targets_top_k_and_max_dim():
+    folded = {("gemm", "S", f"{i}-{i}-{i}"): float(10 - i)
+              for i in range(2, 9)}
+    ts = weighted_targets(folded, top_k=3)
+    assert len(ts) == 3
+    assert ts[0].weight > ts[1].weight > ts[2].weight
+    # bucket 8's representative (362) exceeds max_dim=64 -> the valve
+    # drops it no matter how hot
+    folded[("gemm", "S", "8-8-8")] = 1000.0
+    ts = weighted_targets(folded, max_dim=64)
+    assert all(t.sc.key != "S/NN/8-8-8" for t in ts)
+
+
+def test_windowed_decay_feeds_priorities():
+    """Recent traffic outranks heavier-but-older traffic: the decayed
+    windowed fold is what the weighter consumes, not the raw totals."""
+    r = api.Router(Policy(backend="auto"))
+    for _ in range(3):
+        r.route("gemm", (45, 45, 45), "S", "NN")      # class 5-5-5
+    obs.ROUTES.windowed(now=0.0)                      # init window clock
+    obs.ROUTES.windowed(now=1.5)                      # close bucket: A x3
+    for _ in range(2):
+        r.route("gemm", (300, 300, 300), "S", "NN")   # class 8-8-8, fresh
+    folded = obs.ROUTES.windowed(8, decay=0.5, now=1.6)
+    b = classes.bucket_index
+    ka = ("gemm", "S", f"{b(45)}-{b(45)}-{b(45)}")
+    kb = ("gemm", "S", f"{b(300)}-{b(300)}-{b(300)}")
+    assert folded[ka] == pytest.approx(1.5)           # 3 decayed once
+    assert folded[kb] == pytest.approx(2.0)           # open bucket
+    ts = weighted_targets(folded)
+    assert ts[0].sc.key == "S/NN/8-8-8"               # recency wins
+
+
+# -- budget enforcement -----------------------------------------------------
+
+def test_budgeted_sweep_enforces_timing_budget(monkeypatch):
+    calls = [0]
+
+    def fake_measure(fn, *, warmup, reps):
+        calls[0] += 1
+        return _m(1.0)
+
+    monkeypatch.setattr(search, "try_measure", fake_measure)
+    targets = [TuneTarget("gemm", SizeClass("S", "NN", i, i, i), 10.0 - i)
+               for i in range(2, 7)]
+    prof, tuned, spent = search.budgeted_sweep(targets, budget=4, top=1)
+    # each class costs 1 (xla) + 1 (top candidate) = 2 timings: budget 4
+    # covers exactly the two hottest classes, and the sweep stops BEFORE
+    # starting a class it cannot finish
+    assert len(tuned) == 2 and spent == 4 and calls[0] <= 4
+    assert [t.sc.key for t in tuned] == ["S/NN/2-2-2", "S/NN/3-3-3"]
+    assert len(prof) == 2
+
+
+def test_budgeted_sweep_records_grouped_namespace_and_origin(monkeypatch):
+    monkeypatch.setattr(search, "try_measure",
+                        lambda fn, *, warmup, reps: _m(1.0))
+    sc = SizeClass("S", "NN", 2, 4, 4)
+    prof, tuned, _ = search.budgeted_sweep(
+        [TuneTarget("grouped", sc, 5.0)], budget=8, top=1)
+    assert prof.lookup(sc) is None                    # not in the 2-D space
+    e = prof.lookup_grouped(sc)
+    assert e is not None and e.measured and e.origin == "online"
+    # the namespace survives a JSON roundtrip untouched
+    back = DeviceProfile.from_json(prof.to_json())
+    assert back.lookup_grouped(sc) is not None
+
+
+# -- merge provenance -------------------------------------------------------
+
+def test_merge_newer_entry_wins_only_when_better():
+    sc = SizeClass("S", "NN", 3, 3, 3)
+    sig = KernelSig("S", "NN", 128, 128, 128)
+    base = DeviceProfile(_kind())
+    base.record(sc, _entry(5.0, 50.0, sig=sig, origin="sweep"))
+    worse = DeviceProfile(_kind())
+    worse.record(sc, _entry(10.0, 50.0, sig=sig, origin="online"))
+    merged = base.merge(worse)
+    assert merged.lookup(sc).origin == "sweep"        # old entry kept
+    better = DeviceProfile(_kind())
+    better.record(sc, _entry(2.0, 50.0, sig=sig, origin="online"))
+    merged = base.merge(better)
+    assert merged.lookup(sc).origin == "online"       # displaced: faster
+    assert merged.lookup(sc).pallas.median_us == 2.0
+
+
+def test_profile_entry_origin_json_default_is_sweep():
+    e = _entry(3.0, 4.0, sig=KernelSig("S", "NN", 16, 128, 128),
+               origin="online")
+    assert ProfileEntry.from_json(e.to_json()).origin == "online"
+    legacy = e.to_json()
+    del legacy["origin"]                              # pre-online profile
+    assert ProfileEntry.from_json(legacy).origin == "sweep"
+
+
+# -- the cycle --------------------------------------------------------------
+
+def _route_traffic(n=3):
+    r = api.Router(Policy(backend="auto"))
+    for _ in range(n):
+        r.route("gemm", (45, 45, 45), "S", "NN")
+        r.route("batched_gemm", (4, 8, 16, 24), "S", "NN")
+
+
+def _stub_sweeper(pallas_us=1.0, xla_us=2.0):
+    """A sweeper double honoring the budgeted_sweep contract."""
+    def sweeper(targets, *, budget):
+        prof = DeviceProfile(_kind())
+        tuned, spent = [], 0
+        for t in targets:
+            if spent + 2 > budget:
+                break
+            e = _entry(pallas_us, xla_us,
+                       sig=KernelSig("S", "NN", 128, 128, 128),
+                       origin="online")
+            (prof.record_grouped if t.kind == "grouped"
+             else prof.record)(t.sc, e)
+            tuned.append(t)
+            spent += 2
+        return prof, tuned, spent
+    return sweeper
+
+
+def test_cycle_retunes_merges_and_swaps():
+    _route_traffic()
+    tn = OnlineTuner(sweeper=_stub_sweeper(), budget=8)
+    gen0 = obs.ROUTES.gen
+    rep = tn.cycle()
+    assert rep.cycle == 1 and rep.considered == 2 and rep.retuned == 2
+    assert rep.timings == 4 and rep.swapped
+    # the swap went live: profile installed, memo invalidated, traced
+    prof = profile_mod.active_profile()
+    assert prof is not None and len(prof) == 2
+    assert obs.ROUTES.gen > gen0
+    types = [e[1] for e in obs.TRACE.snapshot()]
+    assert "TUNE_CYCLE" in types and "PROFILE_SWAP" in types
+    cyc = [e for e in obs.TRACE.snapshot() if e[1] == "TUNE_CYCLE"][-1]
+    assert cyc[4] == (1, 2, 4, True) and cyc[5] and cyc[5] > 0
+    assert obs.counter("tune.online.cycles").value == 1
+    assert obs.counter("tune.online.classes_retuned").value == 2
+    assert obs.counter("tune.online.swaps").value == 1
+    assert obs.REGISTRY.get("tune.online.cycle_us").count == 1
+    # tuned-mode dispatch now routes by the swapped-in entries
+    d = api.route("gemm", (45, 45, 45), "S", "NN",
+                  policy=Policy(backend="tuned"))
+    assert d.source == "profile" and d.use_pallas
+    d = api.route("batched_gemm", (4, 8, 16, 24), "S", "NN",
+                  policy=Policy(backend="tuned"))
+    assert d.source == "profile" and d.blocks == (128, 128, 128)
+
+
+def test_cycle_without_traffic_is_a_quiet_noop():
+    tn = OnlineTuner(sweeper=_stub_sweeper())
+    rep = tn.cycle()
+    assert rep.retuned == 0 and not rep.swapped
+    # trace first: the active_profile() read below lazily loads and
+    # emits its own PROFILE_SWAP, which is not the tuner's doing
+    types = [e[1] for e in obs.TRACE.snapshot()]
+    assert "PROFILE_SWAP" not in types and "TUNE_CYCLE" in types
+    assert profile_mod.active_profile() is None
+
+
+def test_cycle_steady_traffic_tunes_once():
+    _route_traffic()
+    tn = OnlineTuner(sweeper=_stub_sweeper(), budget=8)
+    assert tn.cycle().retuned == 2
+    # same traffic, no shift: the done-tracker skips both classes
+    rep2 = tn.cycle()
+    assert rep2.retuned == 0 and not rep2.swapped
+
+
+def test_cycle_mode_mismatch_skips_merge():
+    _route_traffic()
+    live = DeviceProfile(_kind(), mode="compiled")
+    live.record(SizeClass("S", "NN", 1, 1, 1),
+                _entry(1.0, 2.0, sig=KernelSig("S", "NN", 16, 128, 128)))
+    profile_mod.set_active_profile(live)
+    tn = OnlineTuner(sweeper=_stub_sweeper(), budget=8)   # interpret mode
+    rep = tn.cycle()
+    assert rep.retuned == 2 and not rep.swapped
+    assert profile_mod.active_profile() is live           # untouched
+    assert obs.counter("tune.online.merge_skips").value == 1
+
+
+# -- kill switch + background lifecycle -------------------------------------
+
+def test_kill_switch_disables_start(monkeypatch):
+    monkeypatch.setenv(online.KILL_SWITCH_ENV, "0")
+    assert not online.enabled()
+    tn = OnlineTuner(sweeper=_stub_sweeper())
+    assert tn.start() is False and not tn.running
+    assert tn.stop()                                  # no-op, still clean
+    monkeypatch.delenv(online.KILL_SWITCH_ENV)
+    assert online.enabled()
+
+
+def test_background_thread_cycles_and_stops_clean():
+    _route_traffic()
+    tn = OnlineTuner(sweeper=_stub_sweeper(), interval_s=0.01, budget=8)
+    assert tn.start() and tn.running
+    assert tn.start()                                 # idempotent
+    deadline = time.time() + 5.0
+    while tn.cycles < 2 and time.time() < deadline:
+        time.sleep(0.01)
+    assert tn.cycles >= 2
+    assert tn.stop() and not tn.running
+    n = tn.cycles
+    time.sleep(0.05)
+    assert tn.cycles == n                             # really stopped
+    # restartable after stop
+    assert tn.start() and tn.running
+    assert tn.stop()
+
+
+def test_context_manager_runs_and_joins():
+    _route_traffic()
+    with OnlineTuner(sweeper=_stub_sweeper(), interval_s=0.01) as tn:
+        deadline = time.time() + 5.0
+        while tn.cycles < 1 and time.time() < deadline:
+            time.sleep(0.01)
+    assert not tn.running and tn.cycles >= 1
+
+
+# -- router consumes grouped entries ----------------------------------------
+
+def test_router_prefers_grouped_entry_over_2d_reuse():
+    sc = classes.size_class(8, 24, 16, "S", "NN")     # (C, N, K)
+    prof = DeviceProfile(_kind())
+    # the 2-D timing says XLA; the grouped-kernel timing says pallas
+    # with its own blocks — the grouped entry must win
+    prof.record(sc, _entry(100.0, 1.0,
+                           sig=KernelSig("S", "NN", 16, 128, 128)))
+    prof.record_grouped(sc, _entry(1.0, 100.0,
+                                   sig=KernelSig("S", "NN", 8, 128, 256),
+                                   origin="online"))
+    profile_mod.set_active_profile(prof)
+    d = api.route("batched_gemm", (4, 8, 16, 24), "S", "NN",
+                  policy=Policy(backend="tuned"))
+    assert d.source == "profile" and d.use_pallas
+    assert d.blocks == (8, 128, 256)
+
+
+def test_router_falls_back_to_2d_entry_without_grouped_one():
+    sc = classes.size_class(8, 24, 16, "S", "NN")
+    prof = DeviceProfile(_kind())
+    prof.record(sc, _entry(1.0, 100.0,
+                           sig=KernelSig("S", "NN", 16, 128, 128)))
+    profile_mod.set_active_profile(prof)
+    d = api.route("batched_gemm", (4, 8, 16, 24), "S", "NN",
+                  policy=Policy(backend="tuned"))
+    assert d.source == "profile" and d.use_pallas
+    assert d.blocks == (16, 128, 128)                 # legacy 2-D reuse
+
+
+# -- thread safety: route readers vs profile-swap hammering ------------------
+
+def test_router_route_readers_survive_profile_swap_hammer():
+    """Mirror of the PR-9 RouteLog.note stress test, pointed at the
+    swap path: reader threads routing under backend="tuned" (active-
+    profile lookups + memo hits/misses) race a thread hammering
+    ``set_active_profile`` (locked global swap + gen bump + trace emit).
+    No exceptions, and every decision is internally consistent."""
+    sc = classes.size_class(45, 45, 45, "S", "NN")
+    profs = []
+    for pallas_us, xla_us in ((1.0, 9.0), (9.0, 1.0)):
+        p = DeviceProfile(_kind())
+        p.record(sc, _entry(pallas_us, xla_us,
+                            sig=KernelSig("S", "NN", 128, 128, 128)))
+        profs.append(p)
+    errors, stop = [], threading.Event()
+
+    def hammer():
+        i = 0
+        try:
+            while not stop.is_set():
+                profile_mod.set_active_profile(profs[i % 2])
+                i += 1
+        except Exception as e:                        # pragma: no cover
+            errors.append(e)
+
+    def read(tid):
+        try:
+            r = api.Router(Policy(backend="tuned"))
+            for i in range(300):
+                m = 8 + ((tid * 300 + i) % 61)
+                d = r.route("gemm", (m, m, m), "S", "NN")
+                assert d.source in ("profile", "analytical")
+                d45 = r.route("gemm", (45, 45, 45), "S", "NN")
+                # whichever profile was live, the decision came from it
+                assert d45.source == "profile"
+        except Exception as e:                        # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=read, args=(t,)) for t in range(4)]
+    hammerer = threading.Thread(target=hammer)
+    hammerer.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    hammerer.join()
+    assert not errors
+
+
+# -- the real measuring harness (one tiny class; everything above stubs) ----
+
+def test_tune_grouped_class_measures_real_kernels():
+    sc = classes.size_class(8, 8, 8, "S", "NN")       # representative 11^3
+    e = search.tune_grouped_class(sc, G=2, top=1, warmup=0, reps=1)
+    assert e.measured and e.xla is not None
+    if e.sig is not None:                             # a candidate ran
+        assert e.pallas is not None and e.pallas.median_us > 0
